@@ -1,0 +1,80 @@
+"""Shared benchmark plumbing: CSV cache (resumable sweeps) + table printing."""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Callable, Dict, Iterable, List
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "bench_cache")
+
+
+def cached_sweep(name: str, keys: List[str], points: Iterable[tuple],
+                 fn: Callable[..., Dict], force: bool = False) -> List[Dict]:
+    """Run ``fn(*point) -> dict`` per point, caching rows to a CSV keyed by
+    the point tuple — re-running a partially completed sweep only computes
+    the missing cells."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"{name}.csv")
+    cache: Dict[tuple, Dict] = {}
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            for row in csv.DictReader(f):
+                cache[tuple(row[k] for k in keys)] = row
+    rows = []
+    for point in points:
+        key = tuple(str(p) for p in point)
+        if key in cache:
+            rows.append(cache[key])
+            continue
+        out = fn(*point)
+        row = {**dict(zip(keys, key)), **{k: str(v) for k, v in out.items()}}
+        rows.append(row)
+        cache[key] = row
+        _write(path, keys, cache)
+    return rows
+
+
+def _write(path: str, keys: List[str], cache: Dict[tuple, Dict]):
+    fields: List[str] = []
+    for row in cache.values():
+        for k in row:
+            if k not in fields:
+                fields.append(k)
+    tmp = path + ".tmp"
+    with open(tmp, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields)
+        w.writeheader()
+        for row in cache.values():
+            w.writerow(row)
+    os.replace(tmp, path)
+
+
+def heatmap(rows: List[Dict], x: str, y: str, val: str,
+            fmt: str = "{:>7.2f}") -> str:
+    xs = sorted({r[x] for r in rows}, key=_num)
+    ys = sorted({r[y] for r in rows}, key=_num)
+    grid = {(r[y], r[x]): float(r[val]) for r in rows}
+    out = [" " * 12 + "".join(f"{str(v):>8}" for v in xs)]
+    for yy in ys:
+        line = f"{str(yy):>12}"
+        for xx in xs:
+            v = grid.get((yy, xx))
+            line += fmt.format(v) if v is not None else " " * 7 + "-"
+        out.append(line)
+    return "\n".join(out)
+
+
+def _num(s):
+    try:
+        return float(s)
+    except (TypeError, ValueError):
+        return s
+
+
+def size_label(b: float) -> str:
+    b = float(b)
+    for unit, div in (("GiB", 2 ** 30), ("MiB", 2 ** 20), ("KiB", 2 ** 10)):
+        if b >= div:
+            return f"{b / div:g}{unit}"
+    return f"{b:g}B"

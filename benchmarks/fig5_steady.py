@@ -1,0 +1,64 @@
+"""Paper Fig. 5 / Obs. 2: steady congestion at scale — ratio heatmaps
+(nodes x vector size) per system x aggressor, AllGather victim."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import cached_sweep, heatmap, size_label
+from repro.core import bench, congestion as cong
+from repro.core.fabric import systems
+
+SYSTEMS = ("cresco8", "leonardo", "lumi")
+AGGRESSORS = ("alltoall", "incast")
+NODES = (16, 32, 64, 128, 256)
+SIZES = (512, 32 * 2 ** 10, 2 * 2 ** 20, 16 * 2 ** 20)
+
+
+def run_point(system: str, aggr: str, n_nodes: int,
+              vector_bytes: float) -> dict:
+    r = bench.run_point(systems.get_system(system), int(n_nodes),
+                        "ring_allgather", aggr, float(vector_bytes),
+                        cong.steady(), n_iters=25, warmup=5)
+    return {"ratio": round(r.ratio, 4),
+            "t_uncongested_us": round(r.t_uncongested_s * 1e6, 1),
+            "t_congested_us": round(r.t_congested_s * 1e6, 1)}
+
+
+def main(force: bool = False, quick: bool = False):
+    nodes = (16, 64, 256) if quick else NODES
+    sizes = (32 * 2 ** 10, 2 * 2 ** 20) if quick else SIZES
+    points = [(s, a, n, v) for s in SYSTEMS for a in AGGRESSORS
+              for n in nodes for v in sizes]
+    rows = cached_sweep("fig5_steady",
+                        ["system", "aggressor", "n_nodes", "vector_bytes"],
+                        points, run_point, force=force)
+    for s in SYSTEMS:
+        for a in AGGRESSORS:
+            sub = [r for r in rows
+                   if r["system"] == s and r["aggressor"] == a]
+            if not sub:
+                continue
+            for r in sub:
+                r["size"] = size_label(r["vector_bytes"])
+            print(f"\n# Fig. 5 — {s}, {a} aggressor "
+                  "(uncongested/congested ratio; higher is better)")
+            print(heatmap(sub, x="n_nodes", y="size", val="ratio"))
+    # Obs. 2 summary checks
+    get = lambda s, a: min(float(r["ratio"]) for r in rows
+                           if r["system"] == s and r["aggressor"] == a)
+    print("\n# Obs.2 checks (worst cell per system x aggressor):")
+    print(f"#  lumi     a2a {get('lumi', 'alltoall'):.2f} / "
+          f"incast {get('lumi', 'incast'):.2f}   (paper: ~1.0 both)")
+    print(f"#  leonardo a2a {get('leonardo', 'alltoall'):.2f} / "
+          f"incast {get('leonardo', 'incast'):.2f}   (paper: >=0.82 / ~0.2)")
+    print(f"#  cresco8  a2a {get('cresco8', 'alltoall'):.2f} / "
+          f"incast {get('cresco8', 'incast'):.2f}   (paper: ~0.45 / ~0.6)")
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args()
+    main(force=a.force, quick=a.quick)

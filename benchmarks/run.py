@@ -1,0 +1,78 @@
+"""Benchmark orchestrator — one reproduction per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--force]``
+
+Prints each figure's table plus a final ``name,us_per_call,derived`` CSV
+summary line per benchmark point (derived = the figure's key metric).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="reduced grids (smoke)")
+    p.add_argument("--force", action="store_true",
+                   help="ignore the sweep cache")
+    p.add_argument("--only", default="",
+                   help="comma-separated subset, e.g. fig4,fig5")
+    args = p.parse_args()
+
+    from benchmarks import (collective_bench, fig1_breakdown, fig3_sawtooth,
+                            fig4_nslb, fig5_steady, fig6_bursty,
+                            fig7_fig8_scale)
+
+    benches = {
+        "fig1": lambda: fig1_breakdown.main(force=args.force),
+        "fig3": lambda: fig3_sawtooth.main(force=args.force),
+        "fig4": lambda: fig4_nslb.main(force=args.force),
+        "fig5": lambda: fig5_steady.main(force=args.force, quick=args.quick),
+        "fig6": lambda: fig6_bursty.main(force=args.force, quick=args.quick),
+        "fig7_fig8": lambda: fig7_fig8_scale.main(force=args.force,
+                                                  quick=args.quick),
+        "collectives": lambda: collective_bench.main(force=args.force),
+    }
+    only = {s for s in args.only.split(",") if s}
+    summary = []
+    failed = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            rows = fn() or []
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            continue
+        dt = time.time() - t0
+        print(f"[{name}] {len(rows)} points in {dt:.0f}s", flush=True)
+        for r in rows:
+            us = (r.get("us_per_call") or r.get("t_congested_us")
+                  or r.get("t_network_us") or "")
+            derived = (r.get("ratio") or r.get("cv")
+                       or r.get("compute_fraction")
+                       or r.get("gbps_congested") or "")
+            key = ":".join(str(r.get(k, "")) for k in
+                           ("system", "mode", "collective", "aggressor",
+                            "n_nodes", "vector_bytes", "size", "burst_ms",
+                            "pause_ms") if r.get(k))
+            summary.append(f"{name}[{key}],{us},{derived}")
+
+    print("\n# name,us_per_call,derived")
+    for line in summary:
+        print(line)
+    if failed:
+        print(f"\n[run] FAILED benches: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\n[run] all benches complete ({len(summary)} points)")
+
+
+if __name__ == "__main__":
+    main()

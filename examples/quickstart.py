@@ -1,0 +1,61 @@
+"""Quickstart: build an assigned architecture, run a forward/train step,
+ask the congestion layer a question, and lower a production cell.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_names, get_config
+from repro.core import autotune
+from repro.launch.mesh import make_host_mesh, rules_for
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.api import build_model
+from repro.optim.adamw import OptConfig, get_optimizer
+
+
+def main():
+    print("assigned architectures:", ", ".join(all_arch_names()))
+
+    # -- 1. a reduced config on the host mesh (full configs are dry-run only)
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(),
+                              capacity_factor=8.0)
+    mesh = make_host_mesh()
+    rules = rules_for(cfg, mesh)
+    model = build_model(cfg, rules, mesh)
+    opt = get_optimizer(cfg.optimizer, OptConfig(lr=1e-3, warmup_steps=2))
+    step = jax.jit(make_train_step(model, opt))
+
+    rng = jax.random.PRNGKey(0)
+    state = init_train_state(model, opt, rng)
+    tok = jax.random.randint(rng, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    with jax.set_mesh(mesh):
+        for i in range(5):
+            state, metrics = step(state, batch)
+            print(f"step {i}: loss={float(metrics['total_loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+
+    # -- 2. the paper's layer: which collective schedule under congestion?
+    pick = autotune.choose_schedule("all_gather", n=16, vector_bytes=512.0)
+    print(f"\n512B AllGather over 16 ranks -> {pick.algo} "
+          f"({pick.steps} steps, predicted {pick.time_s * 1e6:.1f}us)")
+    pick = autotune.choose_schedule("all_gather", n=16,
+                                    vector_bytes=64 * 2 ** 20)
+    print(f"64MiB AllGather over 16 ranks -> {pick.algo} "
+          f"(predicted {pick.time_s * 1e3:.2f}ms)")
+
+    # -- 3. pod-axis strategy for a 7B model from the roofline model
+    strat = autotune.choose_pod_strategy(grad_bytes_per_device=14e9 / 256,
+                                         n_pods=2)
+    print(f"\n2-pod 7B gradient all-reduce: compress_grads="
+          f"{strat.compress_grads} "
+          f"(collective term {strat.predicted_collective_s * 1e3:.2f}ms vs "
+          f"baseline {strat.predicted_baseline_s * 1e3:.2f}ms)")
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""The paper's measurement protocol (§III): run the victim collective for a
+fixed number of iterations under a congestion profile, discard warmup,
+report mean iteration time and the uncongested/congested ratio.
+
+The paper uses 1000 iterations / 100 warmup on real fabrics; the fluid
+simulator converges much faster (no per-packet noise), so the default here
+is 60/10 — scaled, and noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import congestion as cong
+from repro.core.fabric.simulator import FabricSim
+from repro.core.fabric.systems import SystemPreset
+
+
+@dataclasses.dataclass
+class BenchResult:
+    system: str
+    n_nodes: int
+    victim: str
+    aggressor: str
+    profile: str
+    vector_bytes: float
+    t_uncongested_s: float
+    t_congested_s: float
+    ratio: float  # uncongested / congested (paper Fig. 5-8; higher = better)
+    victim_goodput_gbps: float
+    n_iters: tuple
+
+
+def _mean_iter_time(res, lat: float) -> float:
+    if len(res.iter_times) == 0:
+        return float("inf")
+    return float(np.mean(res.iter_times)) + lat + res.mean_qdelay_s
+
+
+_TOPO_CACHE: dict = {}
+
+
+def machine_topology(system: SystemPreset):
+    """Full-machine topology (cached — reused across heatmap cells)."""
+    key = system.name
+    if key not in _TOPO_CACHE:
+        _TOPO_CACHE[key] = system.make_topology(system.machine_nodes or 8)
+    return _TOPO_CACHE[key]
+
+
+def allocate(system: SystemPreset, n_nodes: int, seed: int = 7) -> np.ndarray:
+    """Model a production batch-scheduler allocation: a scattered sample of
+    the machine (the paper: 'we cannot fully control job allocations' —
+    busy TOP500 systems hand out fragmented node sets). The interleaved
+    victim/aggressor split then alternates within and across switches —
+    the paper's maximal-sharing design (§III-A)."""
+    machine = system.machine_nodes or n_nodes
+    if n_nodes >= machine:
+        return np.arange(machine)
+    rng = np.random.RandomState(seed + n_nodes)
+    return np.sort(rng.choice(machine, size=n_nodes, replace=False))
+
+
+def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
+              aggr_coll: str, vector_bytes: float,
+              profile: cong.Profile, *, n_iters: int = 60, warmup: int = 10,
+              dt: Optional[float] = None, max_steps: int = 200_000,
+              return_traces: bool = False):
+    """One heatmap cell: baseline (aggressors off) vs congested run."""
+    topo = machine_topology(system)
+    alloc = allocate(system, n_nodes)
+    vidx, aidx = cong.interleaved_split(n_nodes)
+    victims, aggressors = alloc[vidx], alloc[aidx]
+    flows = cong.build_flowset(topo, victims, aggressors, victim_coll,
+                               aggr_coll, vector_bytes,
+                               routing_mode=system.static_routing,
+                               k_max=system.k_max)
+    n_v = len(victims)
+    lat = cong.latency_model(victim_coll, n_v)
+    # dt sized so one uncongested iteration spans ~100 steps
+    if dt is None:
+        per_flow = vector_bytes / max(n_v, 1)
+        t_est = max(per_flow / (topo.caps.max()), 2e-6) * 2 + lat
+        dt = float(np.clip(t_est / 100.0, 1e-6, 200e-6))
+
+    sim = FabricSim(topo, flows, system.cc, routing=system.routing, dt=dt)
+    base = sim.run(n_iters=n_iters, warmup=warmup,
+                   envelope_fn=cong.no_congestion().envelope,
+                   max_steps=max_steps)
+    cong_res = sim.run(n_iters=n_iters, warmup=warmup,
+                       envelope_fn=profile.envelope, max_steps=max_steps)
+    t_u = _mean_iter_time(base, lat)
+    t_c = _mean_iter_time(cong_res, lat)
+    out = BenchResult(
+        system=system.name, n_nodes=n_nodes, victim=victim_coll,
+        aggressor=aggr_coll or "none", profile=profile.kind,
+        vector_bytes=vector_bytes, t_uncongested_s=t_u, t_congested_s=t_c,
+        ratio=t_u / t_c if t_c > 0 else 0.0,
+        victim_goodput_gbps=float(np.mean(cong_res.victim_rate_trace[-200:])
+                                  * 8 / 1e9)
+        if len(cong_res.victim_rate_trace) else 0.0,
+        n_iters=(base.n_done, cong_res.n_done),
+    )
+    if return_traces:
+        return out, base, cong_res
+    return out
+
+
+def goodput_trace(system: SystemPreset, n_nodes: int, coll: str,
+                  vector_bytes: float, *, n_iters: int = 40,
+                  dt: float = 20e-6, max_steps: int = 200_000):
+    """Self-congestion run (no aggressors) — Fig. 3 sawtooth experiments."""
+    topo = machine_topology(system) if system.machine_nodes \
+        else system.make_topology(n_nodes)
+    nodes = allocate(system, n_nodes)
+    flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
+                               routing_mode=system.static_routing,
+                               k_max=system.k_max)
+    sim = FabricSim(topo, flows, system.cc, routing=system.routing, dt=dt)
+    res = sim.run(n_iters=n_iters, warmup=5,
+                  envelope_fn=cong.no_congestion().envelope,
+                  max_steps=max_steps)
+    return res
+
+
+def straggler_impact(system: SystemPreset, n_nodes: int, coll: str,
+                     vector_bytes: float, *, slow_factor: float = 0.1,
+                     n_iters: int = 25) -> dict:
+    """Model a straggler as a degraded injection link (DESIGN.md §7):
+    one node's NIC runs at ``slow_factor`` of line rate; a synchronous
+    collective is gated by its slowest member, so the iteration time
+    stretches toward 1/slow_factor. Runtime policy (fault.StepMonitor +
+    elastic_plan) uses this as the model for when eviction pays."""
+    import copy
+
+    topo = machine_topology(system) if system.machine_nodes \
+        else system.make_topology(n_nodes)
+    nodes = allocate(system, n_nodes)
+    flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
+                               routing_mode=system.static_routing,
+                               k_max=system.k_max)
+    sim = FabricSim(topo, flows, system.cc, routing=system.routing, dt=5e-6)
+    base = sim.run(n_iters=n_iters, warmup=5,
+                   envelope_fn=cong.no_congestion().envelope)
+
+    topo_slow = copy.copy(topo)
+    caps = topo.caps.copy()
+    victim_node = int(nodes[len(nodes) // 2])
+    for li, (a, b) in enumerate(topo.link_names):
+        if a == ("h", victim_node) or b == ("h", victim_node):
+            caps[li] = caps[li] * slow_factor
+    topo_slow.caps = caps
+    flows2 = cong.build_flowset(topo_slow, nodes, [], coll, "", vector_bytes,
+                                routing_mode=system.static_routing,
+                                k_max=system.k_max)
+    sim2 = FabricSim(topo_slow, flows2, system.cc, routing=system.routing,
+                     dt=5e-6)
+    slow = sim2.run(n_iters=n_iters, warmup=5,
+                    envelope_fn=cong.no_congestion().envelope)
+    t_base = float(np.mean(base.iter_times)) if len(base.iter_times) else 0.0
+    t_slow = float(np.mean(slow.iter_times)) if len(slow.iter_times) \
+        else float("inf")
+    return {"t_base_s": t_base, "t_straggler_s": t_slow,
+            "slowdown": t_slow / t_base if t_base else float("inf")}

@@ -1,0 +1,173 @@
+"""Custom collective schedules over point-to-point primitives.
+
+The paper (§III-B) implements ring AllGather and linear AlltoAll over
+MPI send/recv so the algorithm is identical across systems. Here the same
+schedules are expressed as explicit ``jax.lax.ppermute`` step sequences
+inside ``shard_map`` — the JAX-native analogue of send/recv — plus the
+XLA-native one-shot collectives as the baseline alternative. A ring
+AllReduce (= ReduceScatter + AllGather) mirrors the paper's Fig. 1 custom
+implementation; its accumulate step is the hot-spot the fused Pallas kernel
+targets (kernels/fused_reduce.py).
+
+All step functions run *inside* shard_map and take the static axis size
+(python int) so schedules unroll at trace time.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _fwd(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _bwd(n: int):
+    return [(i, (i - 1) % n) for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# Ring AllGather (paper's custom AllGather)
+# --------------------------------------------------------------------------
+
+
+def ring_all_gather(x, axis_name: str, n: int, *, bidirectional: bool = False):
+    """x: local shard (d, ...). Returns (n, d, ...) in global rank order."""
+    rank = jax.lax.axis_index(axis_name)
+    if n == 1:
+        return x[None]
+    chunks = [x]
+    if not bidirectional:
+        cur = x
+        for _ in range(n - 1):
+            cur = jax.lax.ppermute(cur, axis_name, _fwd(n))
+            chunks.append(cur)
+        # chunks[j] holds the shard of rank (rank - j) mod n
+        stacked = jnp.stack(chunks)
+        src = (rank - jnp.arange(n)) % n
+        order = jnp.zeros((n,), jnp.int32).at[src].set(jnp.arange(n))
+        return stacked[order]
+    fw = bw = x
+    fchunks, bchunks = [x], []
+    steps_f = (n - 1 + 1) // 2
+    steps_b = (n - 1) // 2
+    for _ in range(steps_f):
+        fw = jax.lax.ppermute(fw, axis_name, _fwd(n))
+        fchunks.append(fw)
+    for _ in range(steps_b):
+        bw = jax.lax.ppermute(bw, axis_name, _bwd(n))
+        bchunks.append(bw)
+    stacked = jnp.stack(fchunks + bchunks)
+    srcs = jnp.concatenate([
+        (rank - jnp.arange(steps_f + 1)) % n,
+        (rank + 1 + jnp.arange(steps_b)) % n])
+    order = jnp.zeros((n,), jnp.int32).at[srcs].set(jnp.arange(n))
+    return stacked[order]
+
+
+# --------------------------------------------------------------------------
+# Ring ReduceScatter / AllReduce (paper Fig. 1 custom ring AllReduce)
+# --------------------------------------------------------------------------
+
+
+def ring_reduce_scatter(x, axis_name: str, n: int,
+                        add: Optional[Callable] = None):
+    """x: (n, d, ...) full per-rank buffer. Returns rank's reduced chunk."""
+    if n == 1:
+        return x[0]
+    add = add or (lambda a, b: a + b)
+    rank = jax.lax.axis_index(axis_name)
+    take = lambda c: jnp.take(x, c % n, axis=0)
+    acc = take(rank - 1)
+    for s in range(1, n):
+        acc = jax.lax.ppermute(acc, axis_name, _fwd(n))
+        acc = add(acc, take(rank - 1 - s))
+    return acc
+
+
+def ring_all_reduce(x, axis_name: str, n: int,
+                    add: Optional[Callable] = None):
+    """x: (n, d, ...). Returns (n, d, ...) fully reduced (RS + AG)."""
+    chunk = ring_reduce_scatter(x, axis_name, n, add)
+    return ring_all_gather(chunk, axis_name, n)
+
+
+# --------------------------------------------------------------------------
+# AlltoAll: linear (paper) and pairwise schedules
+# --------------------------------------------------------------------------
+
+
+def linear_all_to_all(x, axis_name: str, n: int):
+    """Paper's 'linear' algorithm: direct exchange. x: (n, d, ...)."""
+    if n == 1:
+        return x
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+def pairwise_all_to_all(x, axis_name: str, n: int):
+    """n-1 ppermute rounds; round s exchanges with rank +/- s."""
+    rank = jax.lax.axis_index(axis_name)
+    out = jnp.zeros_like(x)
+    out = out.at[rank].set(jnp.take(x, rank, axis=0))
+    for s in range(1, n):
+        sent = jnp.take(x, (rank + s) % n, axis=0)
+        perm = [(i, (i + s) % n) for i in range(n)]
+        rec = jax.lax.ppermute(sent, axis_name, perm)
+        out = out.at[(rank - s) % n].set(rec)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Incast (the paper's edge-congestion aggressor pattern)
+# --------------------------------------------------------------------------
+
+
+def incast_gather(x, axis_name: str, n: int, root: int = 0):
+    """Linear fan-in of every rank's buffer to ``root``. Returns (n, d, ...)
+    valid at root (zeros elsewhere)."""
+    rank = jax.lax.axis_index(axis_name)
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = jnp.where((rank == root),
+                    out.at[root].set(x), out)
+    for s in range(1, n):
+        src = (root + s) % n
+        rec = jax.lax.ppermute(x, axis_name, [(src, root)])
+        out = jnp.where(rank == root, out.at[src].set(rec), out)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Top-level runners + analytic wire-byte models (autotuner/roofline)
+# --------------------------------------------------------------------------
+
+
+def run_on_mesh(mesh, axis_name: str, fn, x, in_spec=None, out_spec=None):
+    """Run a step-schedule collective over one mesh axis via shard_map."""
+    in_spec = in_spec if in_spec is not None else P(axis_name)
+    out_spec = out_spec if out_spec is not None else P(None)
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                         check_vma=False)(x)
+
+
+def wire_bytes_model(kind: str, n: int, vector_bytes: float) -> dict:
+    """Per-rank wire bytes + serialized step count for each schedule."""
+    v = float(vector_bytes)
+    if n <= 1:
+        return {"bytes": 0.0, "steps": 0}
+    if kind == "ring_all_gather":
+        return {"bytes": (n - 1) / n * v, "steps": n - 1}
+    if kind == "bidir_ring_all_gather":
+        return {"bytes": (n - 1) / n * v, "steps": (n - 1 + 1) // 2}
+    if kind == "ring_all_reduce":
+        return {"bytes": 2 * (n - 1) / n * v, "steps": 2 * (n - 1)}
+    if kind in ("linear_all_to_all", "pairwise_all_to_all"):
+        return {"bytes": (n - 1) / n * v,
+                "steps": 1 if kind == "linear_all_to_all" else n - 1}
+    if kind == "incast":
+        return {"bytes": v, "steps": n - 1}
+    raise KeyError(kind)

@@ -1,0 +1,142 @@
+"""Congestion-injection harness (paper §III).
+
+Implements the paper's methodology exactly:
+  * interleaved victim/aggressor node split (§III-A): node 0 -> victims,
+    node 1 -> aggressors, node 2 -> victims, ... "maximizing network
+    resource sharing and, thus, congestion";
+  * aggressor patterns: AlltoAll (intermediate-switch stress) and Incast
+    (edge stress), run in an endless loop;
+  * congestion profiles: steady (§III-C) and bursty (§III-D) with
+    configurable (burst length, inter-burst pause) — the duty cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collectives import wire_bytes_model
+from repro.core.fabric.routing import assign_paths
+from repro.core.fabric.simulator import FlowSet, pack_paths
+from repro.core.fabric.topology import Topology
+
+
+def interleaved_split(n_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Paper §III-A: alternate nodes between victims and aggressors."""
+    ids = np.arange(n_nodes)
+    return ids[ids % 2 == 0], ids[ids % 2 == 1]
+
+
+# --------------------------------------------------------------------------
+# Congestion profiles
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    kind: str  # "off" | "steady" | "bursty"
+    burst_s: float = 0.0
+    pause_s: float = 0.0
+
+    def envelope(self, t0: float, n: int, dt: float) -> np.ndarray:
+        if self.kind == "off":
+            return np.zeros((n,), np.float32)
+        if self.kind == "steady":
+            return np.ones((n,), np.float32)
+        period = self.burst_s + self.pause_s
+        t = t0 + np.arange(n) * dt
+        return ((t % period) < self.burst_s).astype(np.float32)
+
+
+def steady() -> Profile:
+    return Profile("steady")
+
+
+def bursty(burst_s: float, pause_s: float) -> Profile:
+    return Profile("bursty", burst_s, pause_s)
+
+
+def no_congestion() -> Profile:
+    return Profile("off")
+
+
+# --------------------------------------------------------------------------
+# Flow construction for victim/aggressor collectives
+# --------------------------------------------------------------------------
+
+
+def collective_flows(nodes: Sequence[int], kind: str,
+                     vector_bytes: float) -> List[Tuple[int, int, float]]:
+    """(src, dst, bytes_per_iteration) triples for one collective.
+
+    Matches the paper's custom algorithms: ring AllGather (each rank streams
+    (n-1)/n of the vector along the ring), linear AlltoAll (all pairs, V/n
+    each), ring AllReduce (2x ring traffic), Incast (everyone -> one node).
+    """
+    nodes = list(nodes)
+    n = len(nodes)
+    if n < 2:
+        return []
+    out = []
+    if kind == "ring_allgather":
+        per = vector_bytes * (n - 1) / n
+        for i in range(n):
+            out.append((nodes[i], nodes[(i + 1) % n], per))
+    elif kind == "ring_allreduce":
+        per = 2.0 * vector_bytes * (n - 1) / n
+        for i in range(n):
+            out.append((nodes[i], nodes[(i + 1) % n], per))
+    elif kind == "alltoall":
+        per = vector_bytes / n
+        for i in nodes:
+            for j in nodes:
+                if i != j:
+                    out.append((i, j, per))
+    elif kind == "incast":
+        root = nodes[0]
+        for i in nodes[1:]:
+            out.append((i, root, vector_bytes))
+    else:
+        raise KeyError(kind)
+    return out
+
+
+AGGRESSOR_BYTES = 1e30  # endless loop (paper §III-A)
+
+
+def build_flowset(topo: Topology, victim_nodes, aggressor_nodes,
+                  victim_coll: str, aggr_coll: str, vector_bytes: float,
+                  routing_mode: str = "deterministic",
+                  k_max: int = 4, seed: int = 0) -> FlowSet:
+    vflows = collective_flows(victim_nodes, victim_coll, vector_bytes)
+    aflows = (collective_flows(aggressor_nodes, aggr_coll, 1.0)
+              if aggr_coll else [])
+    src_dst = [(s, d) for s, d, _ in vflows + aflows]
+    paths_per_flow = [topo.paths(s, d) for s, d in src_dst]
+    sink = len(topo.caps)
+    paths, n_paths, plen = pack_paths(paths_per_flow, sink, k_max)
+    is_victim = np.array([True] * len(vflows) + [False] * len(aflows))
+    bpi = np.array([b for _, _, b in vflows]
+                   + [AGGRESSOR_BYTES] * len(aflows), np.float64)
+    choice = assign_paths(routing_mode, src_dst, paths_per_flow,
+                          len(topo.caps), seed)
+    # injection-link capacity per flow (the host's NIC rate)
+    host_caps = np.array(
+        [topo.caps[p[0][0]] if p and p[0] else topo.caps.max()
+         for p in paths_per_flow])
+    src_id = np.array([s for s, _ in src_dst], np.int32)
+    return FlowSet(paths=paths, n_paths=n_paths, path_len=plen,
+                   is_victim=is_victim, bytes_per_iter=bpi,
+                   fixed_choice=choice, host_caps=host_caps, src_id=src_id)
+
+
+def latency_model(kind: str, n: int, per_step_s: float = 2e-6) -> float:
+    """Fixed per-iteration latency: serialized schedule steps x per-msg lat."""
+    steps = wire_bytes_model({
+        "ring_allgather": "ring_all_gather",
+        "ring_allreduce": "ring_all_reduce",
+        "alltoall": "linear_all_to_all",
+        "incast": "incast",
+    }[kind], n, 1.0)["steps"]
+    return steps * per_step_s

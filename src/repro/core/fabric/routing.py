@@ -1,0 +1,54 @@
+"""Static path-assignment policies (paper §II load balancing).
+
+* ``deterministic`` — always the first candidate path (legacy IB static).
+* ``ecmp``          — hash of (src, dst); hash collisions leave links idle
+                      while others oversubscribe (paper refs [9]-[13]).
+* ``nslb``          — Network Scale Load Balance (Huawei CE9855, ref [22]):
+                      a flow-matrix computation assigns collision-free
+                      uplinks per (source edge, destination edge) pair;
+                      modeled as greedy min-load assignment over candidate
+                      paths, processed per source so concurrent flows from
+                      one source spread across distinct uplinks.
+
+Adaptive routing (IB AR / Slingshot) is *dynamic* and lives in the simulator
+step (ROUTE_ADAPTIVE); these are the static policies resolved ahead of time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def assign_paths(mode: str, flows_src_dst, paths_per_flow, n_links: int,
+                 seed: int = 0) -> np.ndarray:
+    F = len(paths_per_flow)
+    choice = np.zeros((F,), np.int32)
+    if mode == "deterministic":
+        return choice
+    if mode == "ecmp":
+        rng = np.random.RandomState(seed)
+        salt = rng.randint(1 << 30)
+        for f, (s, d) in enumerate(flows_src_dst):
+            n = max(1, len(paths_per_flow[f]))
+            choice[f] = (hash((s, d, salt)) & 0x7FFFFFFF) % n
+        return choice
+    if mode == "nslb":
+        # flow-matrix style: greedy min-max link usage, grouped by source so
+        # one source's concurrent flows land on distinct uplinks.
+        usage = np.zeros((n_links + 1,), np.int64)
+        order = sorted(range(F), key=lambda f: (flows_src_dst[f][0],
+                                                flows_src_dst[f][1]))
+        for f in order:
+            ps = paths_per_flow[f]
+            if not ps:
+                continue
+            best_k, best_cost = 0, None
+            for k, p in enumerate(ps):
+                cost = (max((usage[l] for l in p), default=0),
+                        sum(usage[l] for l in p))
+                if best_cost is None or cost < best_cost:
+                    best_k, best_cost = k, cost
+            choice[f] = best_k
+            for l in ps[best_k]:
+                usage[l] += 1
+        return choice
+    raise KeyError(mode)

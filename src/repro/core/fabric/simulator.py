@@ -1,0 +1,338 @@
+"""JAX fluid flow-level fabric simulator.
+
+Victim/aggressor flow sets traverse a :class:`Topology` under a congestion-
+control model (cc.py) and a routing policy. The inner loop is a
+``jax.lax.scan`` over fixed-dt timesteps:
+
+  1. injection demand from per-flow CC rate limits,
+  2. (adaptive routing) per-flow path choice by min queue occupancy,
+  3. approximate max-min fair allocation (iterative proportional scaling),
+  4. queue integration (offered load vs capacity) + ECN/credit signals,
+  5. CC rate update per fabric model + optional backpressure spreading,
+  6. victim-iteration completion bookkeeping (the paper's 1000-iteration
+     protocol, scaled: see bench.py).
+
+Approximations are documented in DESIGN.md; the validation targets are the
+paper's observed *behaviors* (sawtooth, NSLB flat-line, incast collapse,
+duty-cycle sensitivity), which emerge from the mechanisms, not from fitting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fabric.cc import (CCParams, KIND_AI_ECN, KIND_DCQCN, KIND_IB,
+                                  KIND_SLINGSHOT, ROUTE_ADAPTIVE, ROUTE_FIXED)
+from repro.core.fabric.topology import Topology
+
+
+@dataclasses.dataclass
+class FlowSet:
+    """Static flow structure for one experiment."""
+
+    paths: np.ndarray  # (F, K, H) link ids, pad = L (sink)
+    n_paths: np.ndarray  # (F,)
+    path_len: np.ndarray  # (F, K) hop counts (for minimal-path bias)
+    is_victim: np.ndarray  # (F,) bool
+    bytes_per_iter: np.ndarray  # (F,) victim bytes; aggressors ~inf
+    fixed_choice: np.ndarray  # (F,)
+    host_caps: np.ndarray  # (F,) injection-link capacity per flow
+    src_id: np.ndarray  # (F,) source node (NIC injection limiting)
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.is_victim)
+
+
+def pack_paths(paths_per_flow: List[List[List[int]]], sink: int, k_max: int = 4):
+    F = len(paths_per_flow)
+    H = max((len(p) for ps in paths_per_flow for p in ps), default=1)
+    out = np.full((F, k_max, H), sink, np.int32)
+    n_paths = np.zeros((F,), np.int32)
+    plen = np.zeros((F, k_max), np.int32)
+    for f, ps in enumerate(paths_per_flow):
+        ps = ps[:k_max] if ps else [[]]
+        n_paths[f] = len(ps)
+        for k, p in enumerate(ps):
+            out[f, k, : len(p)] = p
+            plen[f, k] = len(p)
+    return out, n_paths, plen
+
+
+@dataclasses.dataclass
+class SimResult:
+    iter_times: np.ndarray  # (n_done,) seconds per victim iteration
+    n_done: int
+    mean_qdelay_s: float  # mean victim queueing delay per step
+    victim_rate_trace: np.ndarray  # (T_sub,) aggregate victim goodput B/s
+    time_trace: np.ndarray
+
+
+class FabricSim:
+    def __init__(self, topo: Topology, flows: FlowSet, cc: CCParams,
+                 routing: int = ROUTE_FIXED, dt: float = 10e-6,
+                 maxmin_iters: int = 4, seed: int = 0):
+        self.topo = topo
+        self.flows = flows
+        self.cc = cc
+        self.routing = routing
+        self.dt = float(dt)
+        self.maxmin_iters = maxmin_iters
+        L = len(topo.caps)
+        self.L = L
+        self.caps_pad = jnp.asarray(
+            np.concatenate([topo.caps, [np.inf]]), jnp.float32)
+        self.caps_finite = jnp.asarray(
+            np.concatenate([topo.caps, [1.0]]), jnp.float32)
+        # link <-> switch adjacency for backpressure spreading
+        sw_ids: dict = {}
+        dst_sw = np.zeros(L + 1, np.int32)
+        src_sw = np.zeros(L + 1, np.int32)
+        for li, (a, b) in enumerate(topo.link_names):
+            if not (isinstance(b, tuple) and b[0] == "h"):
+                dst_sw[li] = 1 + sw_ids.setdefault(b, len(sw_ids))
+            if not (isinstance(a, tuple) and a[0] == "h"):
+                src_sw[li] = 1 + sw_ids.setdefault(a, len(sw_ids))
+        self.n_sw = len(sw_ids) + 2  # 0 == "no switch" (host endpoints)
+        self.dst_sw = jnp.asarray(dst_sw, jnp.int32)
+        self.src_sw = jnp.asarray(src_sw, jnp.int32)
+
+        self.paths = jnp.asarray(flows.paths)
+        self.n_paths = jnp.asarray(flows.n_paths)
+        # sprayed "home" path per flow: deterministic hash spread over the
+        # candidates so concurrent flows do not herd onto one port
+        F = flows.n_flows
+        spray = (np.arange(F, dtype=np.int64) * 2654435761 % (1 << 31)) \
+            % np.maximum(flows.n_paths, 1)
+        self.spray_choice = jnp.asarray(spray.astype(np.int32))
+        self.path_len = jnp.asarray(flows.path_len, jnp.float32)
+        self.is_victim = jnp.asarray(flows.is_victim)
+        self.bytes_per_iter = jnp.asarray(flows.bytes_per_iter, jnp.float32)
+        self.fixed_choice = jnp.asarray(flows.fixed_choice)
+        self.host_caps = jnp.asarray(flows.host_caps, jnp.float32)
+        self.src_id = jnp.asarray(flows.src_id, jnp.int32)
+        self.n_src = int(flows.src_id.max()) + 1
+        self._step_chunk = jax.jit(partial(self._run_chunk))
+
+    # ------------------------------------------------------------------
+    def init_state(self, max_iters: int):
+        F = self.flows.n_flows
+        cc = self.cc
+        return {
+            "c": self.host_caps,
+            "rem": jnp.where(self.is_victim, self.bytes_per_iter, 1e30),
+            "q": jnp.zeros((self.L + 1,), jnp.float32),
+            "arr": jnp.zeros((self.L + 1,), jnp.float32),
+            "thresh": jnp.full((self.L + 1,), cc.kmin * cc.qmax_bytes,
+                               jnp.float32),
+            "last_dec": jnp.zeros((F,), jnp.float32),
+            "it": jnp.zeros((), jnp.int32),
+            "t_done": jnp.zeros((max_iters,), jnp.float32),
+            "qd_acc": jnp.zeros((), jnp.float32),
+            "t": jnp.zeros((), jnp.float32),
+        }
+
+    # ------------------------------------------------------------------
+    def _step(self, state, aggr_on):
+        cc, dt = self.cc, self.dt
+        F = self.flows.n_flows
+        active = (self.is_victim | (aggr_on > 0)) & (state["rem"] > 0)
+        inject = state["c"] * active
+        # NIC limit: a source's flows share its injection link
+        src_load = jnp.zeros((self.n_src,), jnp.float32).at[self.src_id].add(
+            inject)
+        scale = jnp.minimum(1.0, self.host_caps
+                            / jnp.maximum(src_load[self.src_id], 1.0))
+        inject = inject * scale
+
+        # ---- routing: spray + congestion-triggered rerouting ----
+        # Production AR does NOT send every flow to the globally least-loaded
+        # port (that herds and oscillates); flows keep a sprayed home path
+        # and move off it only when its occupancy is clearly worse than the
+        # best alternative (hysteresis).
+        if self.routing == ROUTE_ADAPTIVE:
+            occ = state["q"] / cc.qmax_bytes
+            score = jnp.max(occ[self.paths], axis=2) \
+                + 0.05 * self.path_len / jnp.maximum(self.path_len[:, :1], 1)
+            score = jnp.where(jnp.arange(self.paths.shape[1])[None, :]
+                              < self.n_paths[:, None], score, jnp.inf)
+            best = jnp.argmin(score, axis=1)
+            home = self.spray_choice
+            home_score = jnp.take_along_axis(score, home[:, None], 1)[:, 0]
+            best_score = jnp.min(score, axis=1)
+            choice = jnp.where(home_score > best_score + 0.10, best, home)
+        else:
+            choice = self.fixed_choice
+        plinks = jnp.take_along_axis(
+            self.paths, choice[:, None, None], axis=1)[:, 0]  # (F, H)
+        valid = plinks < self.L
+
+        # ---- lossless backpressure (credit/PFC head-of-line stall) ----
+        # A switch whose egress queue saturates exhausts upstream credits /
+        # emits PFC pauses; ingress links feeding that switch lose service,
+        # stalling flows that traverse it (victims included). The stall is
+        # weighted by the saturated egresses' share of the switch's traffic:
+        # pause frames only cover buffer pools filled by hot-destined
+        # packets, so a switch with one hot egress among many mostly-idle
+        # ones only mildly degrades unrelated ingress traffic. This is the
+        # congestion-tree mechanism behind the paper's Incast collapse.
+        # Slingshot tracks per-flow state -> hol_factor == 0 (no stall).
+        caps_eff = self.caps_finite
+        if cc.hol_factor > 0.0:
+            occ_prev = state["q"] / cc.qmax_bytes
+            sat_l = jnp.clip((occ_prev - cc.hol_start)
+                             / (1.0 - cc.hol_start), 0.0, 1.0)
+            # share weighted by buffered bytes: traffic draining through
+            # idle egresses holds no buffer and casts no backpressure
+            hot_q = jnp.zeros((self.n_sw,), jnp.float32).at[
+                self.src_sw].add(state["q"] * sat_l)
+            tot_q = jnp.zeros((self.n_sw,), jnp.float32).at[
+                self.src_sw].add(state["q"])
+            share = hot_q / jnp.maximum(tot_q, 1.0)
+            sw_sat = jnp.zeros((self.n_sw,), jnp.float32).at[
+                self.src_sw].max(sat_l)
+            stall = 1.0 - cc.hol_factor * sw_sat * share
+            stall = stall.at[0].set(1.0)  # 0 == host endpoint
+            caps_eff = self.caps_finite * stall[self.dst_sw]
+
+        # ---- staged propagation + queues ----
+        # Paths are feed-forward by fabric stage (host -> leaf -> spine ->
+        # leaf -> host), so a flow's arrival rate at hop h is its injection
+        # rate scaled down by every oversubscribed upstream hop (FIFO fluid
+        # sharing). Queues then build only where arrivals genuinely exceed
+        # service — an aggressor that is bottlenecked at its own NIC no
+        # longer floods transit queues with phantom demand.
+        r = inject
+        arrival = jnp.zeros((self.L + 1,), jnp.float32)
+        for h in range(plinks.shape[1]):
+            lk = plinks[:, h]
+            contrib = r * valid[:, h]
+            load = jnp.zeros((self.L + 1,), jnp.float32).at[lk].add(contrib)
+            arrival = arrival + load
+            over = jnp.maximum(load / caps_eff, 1.0)
+            r = jnp.where(valid[:, h], r / over[lk], r)
+        a = r  # achieved end-to-end rate
+        q = jnp.clip(state["q"] + (arrival * (1.0 + cc.burst_jitter)
+                                   - caps_eff) * dt,
+                     0.0, cc.qmax_bytes)
+        q = q.at[self.L].set(0.0)
+
+        # ---- signals ----
+        thresh = state["thresh"]
+        if cc.thresh_adapt:
+            # AI-ECN: threshold tracks a fraction of the observed queue so
+            # marking strength is proportional, not bang-bang.
+            thresh = jnp.clip(0.9 * thresh + 0.1 * (0.5 * q + cc.kmin
+                                                    * cc.qmax_bytes),
+                              0.05 * cc.qmax_bytes, cc.kmax * cc.qmax_bytes)
+        over_thresh = q > thresh
+        fmark = jnp.any(over_thresh[plinks] & valid, axis=1)
+        # proportional mark strength (ai_ecn) in [0, 1]
+        strength_l = jnp.clip((q - thresh)
+                              / (cc.kmax * cc.qmax_bytes - thresh + 1.0),
+                              0.0, 1.0)
+        fstrength = jnp.max(jnp.where(valid, strength_l[plinks], 0.0), axis=1)
+
+        # ---- CC update ----
+        c = state["c"]
+        can_dec = state["last_dec"] >= cc.cc_interval_s
+        inc = cc.rai_frac * self.host_caps * (dt / 1e-3)
+        if cc.kind == KIND_DCQCN:
+            dec = fmark & can_dec
+            c = jnp.where(dec, c * cc.md, c + inc)
+        elif cc.kind == KIND_AI_ECN:
+            dec = fmark & can_dec
+            c = jnp.where(dec, c * (1.0 - (1.0 - cc.md) * fstrength), c + inc)
+        elif cc.kind == KIND_IB:
+            # credit semantics: the send window tracks what actually drains
+            # (hop-by-hop credits), SYMMETRICALLY — senders pause when the
+            # downstream buffer fills and resume the instant it drains. The
+            # overshoot keeps the hot buffer fed (full, not at the mark
+            # point); FECN/BECN marking is the slower outer loop.
+            f = 1.0 - jnp.exp(-dt / cc.follow_tau_s)
+            c = (1 - f) * c + f * jnp.maximum(
+                a * cc.follow_gain, cc.min_rate_frac * self.host_caps)
+            dec = fmark & can_dec
+            c = jnp.where(dec, c * cc.md, c + inc)
+        else:  # slingshot: throttle only flows actually bottlenecked
+            f = 1.0 - jnp.exp(-dt / cc.follow_tau_s)
+            bottlenecked = fmark & (a < 0.95 * c)
+            c = jnp.where(bottlenecked,
+                          (1 - f) * c + f * a * cc.follow_gain,
+                          c + inc)
+            dec = bottlenecked & can_dec
+        # CC state only evolves for flows that are actually transmitting —
+        # an idle flow (finished its iteration early, or paused aggressor)
+        # keeps its rate limit.
+        c = jnp.where(active, c, state["c"])
+        dec = dec & active
+        c = jnp.clip(c, cc.min_rate_frac * self.host_caps, self.host_caps)
+        last_dec = jnp.where(dec, 0.0, state["last_dec"] + dt)
+
+        # ---- progress + iteration bookkeeping ----
+        rem = state["rem"] - a * dt
+        vdone = ~jnp.any(self.is_victim & (rem > 0))
+        t_new = state["t"] + dt
+        it = state["it"]
+        slot = jnp.minimum(it, state["t_done"].shape[0] - 1)
+        t_done = jnp.where(vdone, state["t_done"].at[slot].set(t_new),
+                           state["t_done"])
+        it = it + vdone.astype(jnp.int32)
+        rem = jnp.where(vdone & self.is_victim, self.bytes_per_iter, rem)
+        # synchronization gap between victim iterations partially drains queues
+        if cc.iter_drain < 1.0:
+            q = jnp.where(vdone, q * cc.iter_drain, q)
+
+        # queueing delay experienced by victim flows (seconds)
+        qdel = jnp.max(jnp.where(valid, (q / self.caps_finite)[plinks], 0.0),
+                       axis=1)
+        mean_qdel = jnp.sum(qdel * self.is_victim) / jnp.maximum(
+            jnp.sum(self.is_victim), 1)
+        vict_goodput = jnp.sum(a * self.is_victim)
+
+        new_state = {"c": c, "rem": rem, "q": q, "arr": arrival,
+                     "thresh": thresh,
+                     "last_dec": last_dec, "it": it, "t_done": t_done,
+                     "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
+        return new_state, (vict_goodput, mean_qdel)
+
+    def _run_chunk(self, state, envelope):
+        return jax.lax.scan(self._step, state, envelope)
+
+    # ------------------------------------------------------------------
+    def run(self, *, n_iters: int = 60, warmup: int = 10,
+            envelope_fn=None, max_steps: int = 400_000,
+            chunk: int = 2048, trace_stride: int = 8) -> SimResult:
+        """Run until ``n_iters`` victim iterations complete (or budget)."""
+        state = self.init_state(n_iters + 8)
+        traces, times = [], []
+        steps = 0
+        while steps < max_steps:
+            t0 = steps * self.dt
+            if envelope_fn is None:
+                env = np.ones((chunk,), np.float32)
+            else:
+                env = envelope_fn(t0, chunk, self.dt).astype(np.float32)
+            state, (gp, _) = self._step_chunk(state, jnp.asarray(env))
+            traces.append(np.asarray(gp[::trace_stride]))
+            times.append(t0 + np.arange(0, chunk, trace_stride) * self.dt)
+            steps += chunk
+            if int(state["it"]) >= n_iters:
+                break
+        n_done = min(int(state["it"]), n_iters)
+        t_done = np.asarray(state["t_done"])[:n_done]
+        iter_times = np.diff(np.concatenate([[0.0], t_done]))
+        iter_times = iter_times[warmup:] if n_done > warmup else iter_times
+        total_t = float(state["t"]) or 1e-9
+        return SimResult(
+            iter_times=iter_times,
+            n_done=n_done,
+            mean_qdelay_s=float(state["qd_acc"]) / total_t,
+            victim_rate_trace=np.concatenate(traces) if traces else np.zeros(0),
+            time_trace=np.concatenate(times) if times else np.zeros(0),
+        )

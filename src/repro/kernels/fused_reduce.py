@@ -1,0 +1,45 @@
+"""Fused ring-allreduce accumulate step (paper Fig. 1).
+
+The paper's breakdown shows custom ring AllReduce dominated by "reduction
+costs and memory handling (initial buffer setup and memcpy operations)" —
+on TPU the fix is to fuse the receive-buffer read, dtype upcast, scale, and
+accumulate into one VMEM pass so the summand never round-trips through HBM
+between the copy and the add. One (block_rows, block_cols) tile of both
+operands is resident in VMEM per grid step; accumulation is fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(acc_ref, x_ref, o_ref, *, scale: float):
+    acc = acc_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (acc + scale * x).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_rows",
+                                             "block_cols", "interpret"))
+def fused_accumulate(acc, x, *, scale: float = 1.0, block_rows: int = 256,
+                     block_cols: int = 512, interpret: bool = True):
+    """acc, x: (R, C) -> acc + scale * x (fp32 accumulation).
+
+    Block shapes default to (256, 512): 256x512x4B x 3 buffers = 1.5 MiB of
+    VMEM, MXU/VPU-aligned (last dim a multiple of 128).
+    """
+    R, C = acc.shape
+    br, bc = min(block_rows, R), min(block_cols, C)
+    grid = (pl.cdiv(R, br), pl.cdiv(C, bc))
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(acc, x)

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the container is CPU-only; Mosaic
+targets TPU). On a real TPU backend pass ``interpret=False`` (or rely on the
+default, which checks the backend).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_reduce as _fr
+from repro.kernels import quant as _q
+from repro.kernels import ssm_scan as _ss
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_accumulate(acc, x, scale: float = 1.0, interpret=None):
+    return _fr.fused_accumulate(
+        acc, x, scale=scale,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True, interpret=None, **kw):
+    return _fa.flash_attention(
+        q, k, v, causal=causal,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def ssm_scan(dA, dBx, h0, interpret=None, **kw):
+    return _ss.ssm_scan(
+        dA, dBx, h0,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def fused_selective_scan(dt, A, B_coef, C_coef, x, h0, interpret=None, **kw):
+    return _ss.fused_selective_scan(
+        dt, A, B_coef, C_coef, x, h0,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def quantize_int8(x, interpret=None, **kw):
+    return _q.quantize_int8(
+        x, interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def dequantize_int8(q, s, interpret=None, **kw):
+    return _q.dequantize_int8(
+        q, s,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)

@@ -1,0 +1,68 @@
+"""Per-block int8 quantize/dequantize kernels — gradient compression on the
+pod (DCN) axis, the congestion-exposed link the paper's Ethernet findings
+target. Symmetric per-block scaling; used with error feedback in
+optim/compression.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _q_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (rows, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1) / 127.0, 1e-12)
+    q_ref[...] = jnp.clip(jnp.round(x / scale[:, None]), -127, 127
+                          ).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dq_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32)
+                  * s_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rows_per_step",
+                                             "interpret"))
+def quantize_int8(x, *, block: int = 256, rows_per_step: int = 64,
+                  interpret: bool = True):
+    """x: (R, C) with C % block == 0 -> (q int8 (R, C), scales (R, C/block))."""
+    R, C = x.shape
+    nb = C // block
+    xb = x.reshape(R * nb, block)
+    rows = min(rows_per_step, R * nb)
+    grid = (pl.cdiv(R * nb, rows),)
+    q, s = pl.pallas_call(
+        _q_kernel,
+        out_shape=(jax.ShapeDtypeStruct((R * nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((R * nb,), jnp.float32)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                   pl.BlockSpec((rows,), lambda i: (i,))),
+        interpret=interpret,
+    )(xb)
+    return q.reshape(R, C), s.reshape(R, nb)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rows_per_step",
+                                             "interpret", "out_dtype"))
+def dequantize_int8(q, s, *, block: int = 256, rows_per_step: int = 64,
+                    interpret: bool = True, out_dtype=jnp.float32):
+    R, C = q.shape
+    nb = C // block
+    rows = min(rows_per_step, R * nb)
+    grid = (pl.cdiv(R * nb, rows),)
+    out = pl.pallas_call(
+        _dq_kernel,
+        out_shape=jax.ShapeDtypeStruct((R * nb, block), out_dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                  pl.BlockSpec((rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        interpret=interpret,
+    )(q.reshape(R * nb, block), s.reshape(R * nb))
+    return out.reshape(R, C)

@@ -1,0 +1,112 @@
+"""Selective-scan (Mamba) chunk kernel — TPU target.
+
+Grid: (batch, d_inner blocks). Each program keeps a (block_d, N) fp32 state
+tile in VMEM and steps sequentially over the chunk's T timesteps — the
+recurrent dimension stays on-chip, only the per-timestep coefficients
+stream from HBM. This is the TPU-idiomatic shape of Mamba's CUDA scan
+kernel: recompute-friendly chunking instead of warp shuffles (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dA_ref, dBx_ref, h0_ref, hs_ref, hT_ref, *, T: int):
+    h = h0_ref[...].astype(jnp.float32)  # (bd, N)
+
+    def body(t, h):
+        a = dA_ref[t].astype(jnp.float32)
+        b = dBx_ref[t].astype(jnp.float32)
+        h = a * h + b
+        hs_ref[t] = h.astype(hs_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, body, h)
+    hT_ref[...] = h.astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan(dA, dBx, h0, *, block_d: int = 512, interpret: bool = True):
+    """dA, dBx: (B, T, Di, N); h0: (B, Di, N).
+    Returns (hs (B, T, Di, N) fp32, h_final (B, Di, N) fp32)."""
+    B, T, Di, N = dA.shape
+    bd = min(block_d, Di)
+    grid = (B, pl.cdiv(Di, bd))
+    hs, hT = pl.pallas_call(
+        functools.partial(_kernel, T=T),
+        out_shape=(jax.ShapeDtypeStruct((B, T, Di, N), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Di, N), jnp.float32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, T, bd, N), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((None, T, bd, N), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((None, bd, N), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((None, T, bd, N), lambda b, i: (b, 0, i, 0)),
+                   pl.BlockSpec((None, bd, N), lambda b, i: (b, i, 0))),
+        interpret=interpret,
+    )(dA, dBx, h0)
+    return hs, hT
+
+
+# --------------------------------------------------------------------------
+# Fused selective scan — the deploy-path answer to §Perf F1
+# --------------------------------------------------------------------------
+
+
+def _fused_kernel(dt_ref, a_ref, b_ref, c_ref, x_ref, h0_ref, y_ref, hT_ref,
+                  *, T: int):
+    """Per program: one (bd, N) state tile. The coefficients dA = exp(dt*A)
+    and dBx = (dt*x)*B are computed ON THE FLY from the (bd,)-wide dt/x
+    rows and the resident A tile, and the output y_t = h_t . C_t is
+    contracted IN-KERNEL — the (B, T, Di, N) hidden-state tensor never
+    touches HBM. HBM traffic per tile: dt + x + y rows (3*bd*T) plus
+    B + C rows (2*N*T), vs the XLA path's O(T*bd*N) state traffic."""
+    a = a_ref[...].astype(jnp.float32)           # (bd, N)
+    h = h0_ref[...].astype(jnp.float32)          # (bd, N)
+
+    def body(t, h):
+        dt = dt_ref[t].astype(jnp.float32)       # (bd,)
+        x = x_ref[t].astype(jnp.float32)         # (bd,)
+        bvec = b_ref[t].astype(jnp.float32)      # (N,)
+        cvec = c_ref[t].astype(jnp.float32)      # (N,)
+        dA = jnp.exp(dt[:, None] * a)            # (bd, N)
+        h = dA * h + (dt * x)[:, None] * bvec[None, :]
+        y_ref[t] = (h * cvec[None, :]).sum(axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, body, h)
+    hT_ref[...] = h.astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_selective_scan(dt, A, B_coef, C_coef, x, h0, *, block_d: int = 512,
+                         interpret: bool = True):
+    """dt, x: (B, T, Di); A: (Di, N); B_coef, C_coef: (B, T, N);
+    h0: (B, Di, N). Returns (y (B, T, Di) fp32, h_final (B, Di, N) fp32)."""
+    Bb, T, Di = dt.shape
+    N = A.shape[1]
+    bd = min(block_d, Di)
+    grid = (Bb, pl.cdiv(Di, bd))
+    y, hT = pl.pallas_call(
+        functools.partial(_fused_kernel, T=T),
+        out_shape=(jax.ShapeDtypeStruct((Bb, T, Di), jnp.float32),
+                   jax.ShapeDtypeStruct((Bb, Di, N), jnp.float32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, T, bd), lambda b, i: (b, 0, i)),     # dt
+            pl.BlockSpec((bd, N), lambda b, i: (i, 0)),              # A
+            pl.BlockSpec((None, T, N), lambda b, i: (b, 0, 0)),      # B
+            pl.BlockSpec((None, T, N), lambda b, i: (b, 0, 0)),      # C
+            pl.BlockSpec((None, T, bd), lambda b, i: (b, 0, i)),     # x
+            pl.BlockSpec((None, bd, N), lambda b, i: (b, i, 0)),     # h0
+        ],
+        out_specs=(pl.BlockSpec((None, T, bd), lambda b, i: (b, 0, i)),
+                   pl.BlockSpec((None, bd, N), lambda b, i: (b, i, 0))),
+        interpret=interpret,
+    )(dt, A, B_coef, C_coef, x, h0)
+    return y, hT

@@ -1,0 +1,443 @@
+"""While-trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each computation once, so anything
+inside a ``lax.scan`` (our layer stacks, attention chunk loops, SSM chunk
+loops) is counted for a SINGLE iteration. The dry-run roofline instead uses
+this module, which parses the HLO text, resolves ``while`` trip counts from
+their condition computations, and multiplies per-computation statistics by
+the product of enclosing loop trip counts:
+
+  * dot/convolution FLOPs  (compute roofline term)
+  * per-op operand+result bytes at fusion boundaries (memory term proxy)
+  * collective operand/result/wire bytes (collective term), with per-chip
+    wire bytes from standard ring-algorithm formulas.
+
+Per-op ``metadata op_name`` attribution is kept for the top contributors so
+§Perf iterations can tell WHICH einsum/collective dominates.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute", "ragged-all-to-all")
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_NAME_REF_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_METADATA_RE = re.compile(r'op_name="([^"]+)"')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "while", "conditional",
+    "call", "optimization-barrier", "domain", "add-dependency",
+}
+
+
+def _shape_dims(type_str: str):
+    """All (dtype, dims) groups in a type string (handles tuples)."""
+    return [(d, tuple(int(x) for x in dims.split(",") if x))
+            for d, dims in _TYPE_RE.findall(type_str)]
+
+
+def _nbytes_of(groups) -> int:
+    total = 0
+    for dtype, dims in groups:
+        n = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "kind", "result_groups", "operands", "attrs",
+                 "metadata")
+
+    def __init__(self, name, kind, result_groups, operands, attrs, metadata):
+        self.name = name
+        self.kind = kind
+        self.result_groups = result_groups
+        self.operands = operands
+        self.attrs = attrs
+        self.metadata = metadata
+
+
+_KIND_RE = re.compile(
+    r"^\s*(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?)\s+([\w\-]+)(?:-start)?\(")
+
+
+def _parse_computation_ops(lines):
+    ops = []
+    symbols = {}
+    for line in lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        km = _KIND_RE.match(" " + rest)
+        if not km:
+            continue
+        kind = km.group(1)
+        type_part = rest[: rest.find(kind + "(") if kind + "(" in rest
+                         else rest.find("(")]
+        result_groups = _shape_dims(type_part)
+        symbols[name] = result_groups
+        paren = rest.find("(", rest.find(kind))
+        depth, end = 0, len(rest)
+        for i in range(paren, len(rest)):
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = rest[paren + 1: end]
+        operands = _NAME_REF_RE.findall(operand_str)
+        attrs = rest[end + 1:]
+        md = _METADATA_RE.search(rest)
+        ops.append(_Op(name, kind, result_groups, operands, attrs,
+                       md.group(1) if md else ""))
+    return ops, symbols
+
+
+def parse_hlo(text: str):
+    """Split module text into computations -> (ops, symbols, is_entry)."""
+    comps = {}
+    entry = None
+    cur_name, cur_lines = None, []
+    for line in text.splitlines():
+        hm = _COMP_HEADER_RE.match(line)
+        if hm and line.rstrip().endswith("{"):
+            cur_name = hm.group(2)
+            cur_lines = []
+            comps[cur_name] = cur_lines
+            if hm.group(1):
+                entry = cur_name
+            # header params double as symbols
+            cur_lines.append("  " + _param_line(hm.group(3)))
+            continue
+        if line.strip() == "}":
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    parsed = {}
+    for name, lines in comps.items():
+        ops, symbols = _parse_computation_ops(lines)
+        parsed[name] = (ops, symbols)
+    return parsed, entry
+
+
+def _param_line(params: str) -> str:
+    # turn "x.1: bf16[4,128], w: f32[2]" into synthetic parameter ops
+    out = []
+    for part in re.findall(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|[a-z0-9]+\[[\d,]*\])",
+                           params):
+        out.append(f"%{part[0]} = {part[1]} parameter(0)")
+    return "\n".join(out)
+
+
+_CONST_VAL_RE = re.compile(r"constant\((\d+)\)")
+
+
+def compute_multipliers(parsed, entry, raw_text: str):
+    """mult[comp] = expected executions. Resolves while trip counts from the
+    largest integer constant in the condition computation."""
+    # constants per computation from raw text (value lives in the op line)
+    const_by_comp = defaultdict(list)
+    cur = None
+    for line in raw_text.splitlines():
+        hm = _COMP_HEADER_RE.match(line)
+        if hm and line.rstrip().endswith("{"):
+            cur = hm.group(2)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur:
+            for v in _CONST_VAL_RE.findall(line):
+                const_by_comp[cur].append(int(v))
+
+    whiles = []  # (parent, body, cond)
+    calls = []  # (parent, target)
+    for cname, (ops, _) in parsed.items():
+        for op in ops:
+            if op.kind == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if bm and cm:
+                    whiles.append((cname, bm.group(1), cm.group(1)))
+            elif op.kind in ("call", "conditional"):
+                for t in re.findall(
+                        r"(?:to_apply|branch_computations=\{|true_computation|"
+                        r"false_computation)=?%?([\w.\-]+)", op.attrs):
+                    calls.append((cname, t))
+
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    for _ in range(8):  # shallow nesting; fixpoint
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for parent, body, cond in whiles:
+            trip = max(const_by_comp.get(cond, [1]) or [1])
+            new[body] += mult[parent] * trip
+            new[cond] += mult[parent] * (trip + 1)
+        for parent, target in calls:
+            new[target] += mult[parent]
+        if dict(new) == dict(mult):
+            break
+        mult = new
+    return mult
+
+
+def _group_size(attrs: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def wire_bytes(kind: str, operand: float, result: float, g: int) -> float:
+    """Per-chip bytes moved over links, ring-algorithm model."""
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if kind == "all-reduce":
+        return 2 * frac * result
+    if kind == "all-gather":
+        return frac * result
+    if kind == "reduce-scatter":
+        return frac * operand
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return frac * operand
+    if kind == "collective-permute":
+        return float(result)
+    return 0.0
+
+
+def _bf16_wire_factor(op, ops_by_name, consumers) -> float:
+    """XLA's CPU backend has no native bf16 collectives and float-normalizes
+    them to f32 (verified with a minimal shard_map repro — a pure-bf16
+    all_to_all lowers to f32 on CPU). The dry-run targets TPU, where bf16
+    stays bf16 on the wire, so collectives that are provably bf16-primal
+    (operand produced by a convert-from-bf16, or every consumer converting
+    back to bf16) are counted at 2 bytes/element."""
+    def is_down_convert_producer(name):
+        p = ops_by_name.get(name)
+        if p is None:
+            return False
+        if p.kind == "convert":
+            src = p.operands[0] if p.operands else None
+            sp = ops_by_name.get(src)
+            return bool(sp and sp.result_groups
+                        and sp.result_groups[0][0] == "bf16")
+        return p.kind == "fusion" and "convert" in p.name
+
+    def is_up_convert_consumer(name):
+        cs = consumers.get(name, [])
+        if not cs:
+            return False
+        return all((c.kind == "convert"
+                    and c.result_groups
+                    and c.result_groups[0][0] == "bf16")
+                   or (c.kind == "fusion" and "convert" in c.name)
+                   or c.kind == "get-tuple-element"
+                   and is_up_convert_consumer(c.name)
+                   for c in cs)
+
+    if any(is_down_convert_producer(o) for o in op.operands):
+        return 0.5
+    if is_up_convert_consumer(op.name):
+        return 0.5
+    return 1.0
+
+
+def analyze(text: str, n_devices: int) -> dict:
+    """Full module analysis. Returns flops / memory bytes / collective stats,
+    all per-device (the module is the per-partition SPMD program)."""
+    parsed, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult = compute_multipliers(parsed, entry, text)
+
+    # fusion-called computations must not be double counted: only comps with
+    # mult > 0 (entry + while bodies/conds + call targets) are "executed".
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = defaultdict(lambda: {"count": 0.0, "operand_bytes": 0.0,
+                                "result_bytes": 0.0, "wire_bytes": 0.0})
+    top_dots = []
+    top_colls = []
+    bytes_by_op = defaultdict(float)  # metadata op_name -> HBM bytes
+    # fusion ops carry no metadata of their own; attribute them to their
+    # called computation's root-op metadata
+    _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+    comp_md = {}
+    for cname, (ops, _) in parsed.items():
+        md = ""
+        for o in ops:
+            if o.metadata:
+                md = o.metadata
+        comp_md[cname] = md
+
+    def op_label(op):
+        if op.metadata:
+            return op.metadata
+        if op.kind == "fusion":
+            cm = _CALLS_RE.search(op.attrs)
+            if cm and comp_md.get(cm.group(1)):
+                return comp_md[cm.group(1)]
+        return op.kind
+
+    # The CPU backend decomposes shard_map collectives into a tuple form
+    # with slice/concat/copy/convert scaffolding, every piece tagged with
+    # the collective's op_name. None of that scaffolding exists on the TPU
+    # target (native collectives), so its bytes are excluded; the
+    # collective op itself is counted once (operands + results).
+    _COLL_TAILS = ("all_to_all", "all_gather", "reduce_scatter", "psum",
+                   "psum_scatter", "ppermute", "all_gather_invariant")
+
+    def is_scaffolding(op):
+        if op.kind in _COLLECTIVE_KINDS:
+            return False
+        label = op_label(op)
+        if label == op.kind:
+            return False
+        tail = label.rsplit("/", 1)[-1]
+        return any(tail == t or tail.startswith(t + "[") for t in _COLL_TAILS)
+
+    for cname, (ops, symbols) in parsed.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        ops_by_name = {op.name: op for op in ops}
+        consumers = defaultdict(list)
+        for op in ops:
+            for o in op.operands:
+                consumers[o].append(op)
+        # collectives whose scaffolding (same op_name tag) includes a bf16
+        # convert are bf16-primal: the f32 on the wire is CPU promotion
+        md_has_bf16 = defaultdict(bool)
+        for op in ops:
+            if op.metadata and (op.kind == "convert"
+                                or (op.kind == "fusion"
+                                    and "convert" in op.name)):
+                groups = op.result_groups
+                src = (ops_by_name.get(op.operands[0])
+                       if op.operands else None)
+                if (groups and groups[0][0] == "bf16") or \
+                        (src and src.result_groups
+                         and src.result_groups[0][0] == "bf16"):
+                    md_has_bf16[op.metadata] = True
+        for op in ops:
+            if is_scaffolding(op):
+                continue
+            rbytes = _nbytes_of(op.result_groups)
+            label = op_label(op)
+            ltail = label.rsplit("/", 1)[-1]
+            if op.kind == "dynamic-update-slice" \
+                    or (op.kind == "fusion"
+                        and ltail.startswith("dynamic_update_slice")):
+                # in-place on TPU (donated/aliased buffers): traffic is the
+                # updated region, not the whole buffer. The fused form on
+                # CPU copies the full tensor — count operands minus the
+                # pass-through buffer instead (== the update bytes).
+                obytes = sum(_nbytes_of(symbols.get(o, []))
+                             for o in op.operands if o in symbols)
+                biggest = max((_nbytes_of(symbols.get(o, []))
+                               for o in op.operands if o in symbols),
+                              default=0)
+                upd = max(obytes + rbytes - 2 * biggest, 0)
+                hbm_bytes += m * upd
+                bytes_by_op[label] += m * upd
+            elif op.kind in ("slice", "dynamic-slice", "gather") \
+                    or (op.kind == "fusion"
+                        and ltail.startswith(("dynamic_slice", "gather["))):
+                # slicing/gathering reads only the addressed region — the
+                # stacked scan-parameter tensor is NOT re-read whole every
+                # layer iteration
+                hbm_bytes += m * 2 * rbytes
+                bytes_by_op[label] += m * 2 * rbytes
+            elif op.kind not in _SKIP_BYTES_OPS:
+                obytes = sum(_nbytes_of(symbols.get(o, [])) for o in op.operands
+                             if o in symbols)
+                hbm_bytes += m * (rbytes + obytes)
+                bytes_by_op[label] += m * (rbytes + obytes)
+            if op.kind in ("dot", "convolution"):
+                cm = _CONTRACT_RE.search(op.attrs)
+                k = 1
+                if cm and op.operands and op.operands[0] in symbols:
+                    lhs = symbols[op.operands[0]]
+                    if lhs and lhs[0][1]:
+                        dims = lhs[0][1]
+                        for ci in cm.group(1).split(","):
+                            if ci:
+                                k *= dims[int(ci)]
+                relems = sum(_prod(d) for _, d in op.result_groups)
+                f = 2.0 * relems * k
+                flops += m * f
+                top_dots.append((m * f, op.metadata or op.name))
+            base = op.kind
+            if base.endswith("-start"):
+                base = base[:-6]
+            if base in _COLLECTIVE_KINDS:
+                g = _group_size(op.attrs, n_devices)
+                obytes = sum(_nbytes_of(symbols.get(o, [])) for o in op.operands
+                             if o in symbols)
+                if obytes == 0:  # fallback when operand type unknown
+                    if base == "all-gather":
+                        obytes = rbytes / max(g, 1)
+                    elif base == "reduce-scatter":
+                        obytes = rbytes * g
+                    else:
+                        obytes = rbytes
+                dtf = _bf16_wire_factor(op, ops_by_name, consumers)
+                if dtf == 1.0 and op.metadata and md_has_bf16[op.metadata]:
+                    dtf = 0.5
+                obytes *= dtf
+                rb_eff = rbytes * dtf
+                w = wire_bytes(base, obytes, rb_eff, g)
+                d = coll[base]
+                d["count"] += m
+                d["operand_bytes"] += m * obytes
+                d["result_bytes"] += m * rb_eff
+                d["wire_bytes"] += m * w
+                top_colls.append((m * w, base, g, op.metadata or op.name))
+
+    top_dots.sort(reverse=True)
+    top_colls.sort(reverse=True)
+    top_bytes = sorted(bytes_by_op.items(), key=lambda kv: -kv[1])
+    total = {k: sum(d[k] for d in coll.values())
+             for k in ("count", "operand_bytes", "result_bytes", "wire_bytes")}
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": {"per_kind": {k: dict(v) for k, v in coll.items()},
+                        "total": total},
+        "top_dots": [(f, n) for f, n in top_dots[:12]],
+        "top_collectives": [(w, k, g, n) for w, k, g, n in top_colls[:12]],
+        "top_bytes": [(b, n) for n, b in top_bytes[:16]],
+    }
+
+
+def _prod(dims) -> int:
+    out = 1
+    for d in dims:
+        out *= d
+    return out

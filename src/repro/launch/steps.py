@@ -1,0 +1,94 @@
+"""Step builders shared by the dry-run, the trainer, and the server."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.api import (batch_shapes, batch_specs, build_model,
+                              decode_inputs, to_shardings)
+from repro.optim.adamw import OptConfig, get_optimizer
+
+
+def make_train_step(model, optimizer):
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state["params"], batch)
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, state["opt"], state["params"], state["step"])
+        metrics = dict(metrics, grad_norm=gnorm, total_loss=loss)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def train_state_specs(model, optimizer):
+    return {"params": model.param_specs,
+            "opt": optimizer.state_specs(model.param_specs),
+            "step": P()}
+
+
+def train_state_shapes(model, optimizer):
+    return {"params": model.param_shapes,
+            "opt": optimizer.state_shapes(model.param_shapes),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_train_state(model, optimizer, rng):
+    params = model.init(rng)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers (used by dryrun.py and the launchers)
+# --------------------------------------------------------------------------
+
+
+def lower_cell(cfg, shape, mesh, rules, *, opt_overrides=None, donate=True):
+    """Lower one (arch x shape) cell on ``mesh``. Returns jax.stages.Lowered."""
+    model = build_model(cfg, rules, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        optimizer = get_optimizer(cfg.optimizer, opt_overrides or OptConfig())
+        step_fn = make_train_step(model, optimizer)
+        state_sh = to_shardings(mesh, train_state_specs(model, optimizer))
+        batch_sh = to_shardings(mesh, batch_specs(cfg, rules,
+                                                  shape.global_batch))
+        state_shapes = train_state_shapes(model, optimizer)
+        b_shapes = batch_shapes(cfg, shape)
+        metrics_sh = {"loss": repl, "aux_loss": repl, "grad_norm": repl,
+                      "total_loss": repl}
+        fn = jax.jit(step_fn,
+                     in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,) if donate else ())
+        return fn.lower(state_shapes, b_shapes)
+
+    model_sh = to_shardings(mesh, model.param_specs)
+    if shape.kind == "prefill":
+        batch_sh = to_shardings(mesh, batch_specs(cfg, rules,
+                                                  shape.global_batch))
+        b_shapes = batch_shapes(cfg, shape)
+        cache_sh = to_shardings(mesh, model.cache_specs(shape.global_batch))
+        fn = jax.jit(model.prefill,
+                     in_shardings=(model_sh, batch_sh),
+                     out_shardings=(repl, cache_sh))
+        return fn.lower(model.param_shapes, b_shapes)
+
+    if shape.kind == "decode":
+        (cache, tokens, pos), (cache_specs, tok_spec, pos_spec) = \
+            decode_inputs(cfg, shape, model)
+        cache_sh = to_shardings(mesh, cache_specs)
+        fn = jax.jit(model.decode,
+                     in_shardings=(model_sh, cache_sh,
+                                   NamedSharding(mesh, tok_spec),
+                                   NamedSharding(mesh, pos_spec)),
+                     out_shardings=(repl, cache_sh),
+                     donate_argnums=(1,) if donate else ())
+        return fn.lower(model.param_shapes, cache, tokens, pos)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,77 @@
+"""Training launcher CLI.
+
+Single-host (this container):
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+        --steps 50 --ckpt-dir /tmp/ck
+
+Multi-host production launch (one process per host; the mesh spans all
+processes — jax.distributed wires them together):
+    python -m repro.launch.train --arch kimi-k2-1t-a32b --variant opt \
+        --coordinator <host0>:1234 --num-hosts 64 --host-id $SLURM_PROCID
+
+The full assigned configs only fit the production mesh; ``--reduced`` runs
+the same driver with the smoke-scale config on whatever devices exist.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--variant", default="")
+    p.add_argument("--reduced", action="store_true",
+                   help="smoke-scale same-family config (CPU-sized)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--global-batch", type=int, default=8)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--lr", type=float, default=3e-4)
+    # multi-host wiring
+    p.add_argument("--coordinator", default="")
+    p.add_argument("--num-hosts", type=int, default=1)
+    p.add_argument("--host-id", type=int, default=0)
+    args = p.parse_args()
+
+    if args.coordinator:
+        import jax
+
+        jax.distributed.initialize(coordinator_address=args.coordinator,
+                                   num_processes=args.num_hosts,
+                                   process_id=args.host_id)
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.optim.adamw import OptConfig
+    from repro.runtime.train_loop import TrainConfig, Trainer
+
+    cfg = get_config(args.arch)
+    if args.variant:
+        from repro.configs.opt_variants import apply_variant
+
+        cfg = apply_variant(cfg, args.variant)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduced(), capacity_factor=8.0)
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        n_hosts=args.num_hosts, host_id=args.host_id))
+    tc = TrainConfig(
+        total_steps=args.steps, microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                      decay_steps=args.steps))
+    trainer = Trainer(cfg, tc, dataset=data)
+    out = trainer.run()
+    print(f"[train] arch={cfg.name} steps={out['steps_run']} "
+          f"loss {out['first_loss']:.4f} -> {out['final_loss']:.4f} "
+          f"restarts={out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

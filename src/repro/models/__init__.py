@@ -1,0 +1,2 @@
+from repro.models.api import build_model  # noqa: F401
+from repro.models.layers import AxisRules, single_device_rules  # noqa: F401

@@ -1,0 +1,67 @@
+"""Public model API: build a Model from an ArchConfig, and produce the
+abstract input/state specs used by the dry-run and the launchers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.encdec import build_encdec
+from repro.models.layers import AxisRules
+from repro.models.transformer import Model, build_decoder_lm
+
+
+def build_model(cfg: ArchConfig, rules: AxisRules, mesh) -> Model:
+    if cfg.is_encdec:
+        return build_encdec(cfg, rules, mesh)
+    return build_decoder_lm(cfg, rules, mesh)
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStructs — no allocation; dry-run contract)
+# --------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Train/prefill batch as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tok = lambda n: jax.ShapeDtypeStruct((B, n), jnp.int32)
+    if cfg.family == "vlm":
+        Pf = cfg.n_frontend_tokens
+        return {"patches": jax.ShapeDtypeStruct((B, Pf, cfg.d_model), cdt),
+                "tokens": tok(S - Pf), "labels": tok(S - Pf)}
+    if cfg.family == "audio":
+        F = cfg.n_frontend_tokens
+        return {"frames": jax.ShapeDtypeStruct((B, F, cfg.d_model), cdt),
+                "tokens": tok(S), "labels": tok(S)}
+    return {"tokens": tok(S), "labels": tok(S)}
+
+
+def batch_specs(cfg: ArchConfig, rules: AxisRules, batch_size: int) -> dict:
+    bspec = rules.dp_if(batch_size)
+    sp = rules.tp if cfg.seq_shard else None
+    out = {"tokens": P(bspec, sp), "labels": P(bspec, sp)}
+    if cfg.family == "vlm":
+        out["patches"] = P(bspec, None, None)
+    if cfg.family == "audio":
+        out["frames"] = P(bspec, None, None)
+    return out
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeConfig, model: Model):
+    """(cache, tokens, pos) ShapeDtypeStructs + specs for a decode cell."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.cache_shapes(B, S)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    cache_specs = model.cache_specs(B)
+    specs = (cache_specs, P(model.rules.dp_if(B), None), P())
+    return (cache, tokens, pos), specs
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,206 @@
+"""Encoder-decoder backbone (whisper-tiny). The audio conv frontend is a stub
+per the brief: inputs are precomputed frame embeddings (B, n_frames, d).
+
+Positional encoding is sinusoidal for both stacks (Whisper's decoder uses a
+learned table of its real 448-token maximum; the assigned stress shapes go to
+32k, so a fixed-size learned table cannot apply — noted in DESIGN.md §6).
+6 heads do not divide the 16-way TP axis: attention is head-replicated, only
+the MLP is TP-sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    AxisRules, ParamDecl, attn_decls, build_params, decl_shapes, decl_specs,
+    decode_attention, embed_decls, embed_tokens, flash_attention_xla,
+    make_wsc, mlp_apply, mlp_decls, rms_norm, stack_decls, token_xent,
+    unembed,
+)
+from repro.models.transformer import Model, _scan_layers
+
+
+def sinusoids(length: int, channels: int, offset=0):
+    """Standard sin/cos positional embedding (length, channels), fp32."""
+    assert channels % 2 == 0
+    log_timescale = np.log(10_000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    pos = (offset + jnp.arange(length))[:, None].astype(jnp.float32)
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def build_encdec(cfg, rules: AxisRules, mesh) -> Model:
+    wsc = make_wsc(mesh)
+    eps = cfg.norm_eps
+    cdt = jnp.dtype(cfg.compute_dtype)
+    d, H, KH, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    F = cfg.n_frontend_tokens
+
+    ln = lambda: ParamDecl((d,), P(None), init="ones")
+    enc_block = {"ln1": ln(), "attn": attn_decls(cfg, rules),
+                 "ln2": ln(), "ffn": mlp_decls(cfg, rules)}
+    dec_block = {"ln1": ln(), "attn": attn_decls(cfg, rules),
+                 "lnx": ln(), "xattn": attn_decls(cfg, rules),
+                 "ln2": ln(), "ffn": mlp_decls(cfg, rules)}
+    decls = {
+        "embed": embed_decls(cfg, rules),
+        "enc_layers": stack_decls(enc_block, cfg.enc_layers),
+        "enc_ln_post": ln(),
+        "dec_layers": stack_decls(dec_block, cfg.n_layers),
+    }
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    def init(rng):
+        return build_params(decls, rng, pdt)
+
+    def _qkv(pl, x):
+        q = jnp.einsum("bsd,dhk->bshk", x, pl["wq"].astype(cdt))
+        k = jnp.einsum("bsd,dhk->bshk", x, pl["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", x, pl["wv"].astype(cdt))
+        return q, k, v
+
+    def _proj_out(pl, o):
+        return jnp.einsum("bshk,hkd->bsd", o, pl["wo"].astype(cdt))
+
+    def attn(pl, xq, xkv, *, causal, chunk, bspec=None):
+        """Sequence-TP attention: 6 heads don't divide the 16-way model
+        axis, so Q's sequence dim shards over ``model`` instead and KV is
+        gathered — per-device score traffic drops tp_size-fold (§Perf W4)."""
+        q, _, _ = _qkv(pl, xq)
+        _, k, v = _qkv(pl, xkv)
+        q = wsc(q, bspec, rules.tp, None, None)
+        # pin to the S-shard before gathering (see transformer.attn_seq)
+        k = wsc(k, bspec, rules.tp, None, None)
+        v = wsc(v, bspec, rules.tp, None, None)
+        k = wsc(k, bspec, None, None, None)
+        v = wsc(v, bspec, None, None, None)
+        o = flash_attention_xla(q, k, v, causal=causal, chunk=chunk,
+                                score_dtype=cfg.score_dtype)
+        return _proj_out(pl, o), (k, v)
+
+    def encode(params, frames, bspec):
+        x = frames.astype(cdt) + sinusoids(F, d).astype(cdt)[None]
+        x = wsc(x, bspec, None, None)
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], eps)
+            ao, _ = attn(pl["attn"], h, h, causal=False, chunk=cfg.attn_chunk,
+                         bspec=bspec)
+            x = x + ao
+            x = x + mlp_apply(rms_norm(x, pl["ln2"], eps), pl["ffn"], cfg.act)
+            return x, 0
+
+        x, _ = _scan_layers(body, x, params["enc_layers"], cfg.remat)
+        return rms_norm(x, params["enc_ln_post"], eps)
+
+    def run_decoder_seq(params, enc_out, tokens, bspec, emit_cache):
+        S = tokens.shape[1]
+        x = embed_tokens(params["embed"], tokens, cdt)
+        x = x + sinusoids(S, d).astype(cdt)[None]
+        x = wsc(x, bspec, None, None)
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], eps)
+            ao, (k, v) = attn(pl["attn"], h, h, causal=True,
+                              chunk=cfg.attn_chunk, bspec=bspec)
+            x = x + ao
+            hx = rms_norm(x, pl["lnx"], eps)
+            xo, (xk, xv) = attn(pl["xattn"], hx, enc_out, causal=False,
+                                chunk=min(cfg.attn_chunk, F), bspec=bspec)
+            x = x + xo
+            x = x + mlp_apply(rms_norm(x, pl["ln2"], eps), pl["ffn"], cfg.act)
+            cache = 0
+            if emit_cache:
+                cache = {"k": wsc(k, bspec, rules.kv_seq, None, None),
+                         "v": wsc(v, bspec, rules.kv_seq, None, None),
+                         "xk": xk, "xv": xv}
+            return x, cache
+
+        x, caches = _scan_layers(body, x, params["dec_layers"], cfg.remat)
+        return x, (caches if emit_cache else None)
+
+    # ---------------- public API ----------------
+    def loss(params, batch):
+        tokens = batch["tokens"]
+        bspec = rules.dp_if(tokens.shape[0])
+        enc_out = encode(params, batch["frames"], bspec)
+        x, _ = run_decoder_seq(params, enc_out, tokens, bspec, False)
+        logits = unembed(params["embed"], x, eps)
+        logits = wsc(logits, bspec, None, rules.tp_if(cfg.vocab_padded))
+        labels = batch["labels"]
+        ce = token_xent(logits, labels, mask=labels >= 0)
+        return ce, {"loss": ce, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        bspec = rules.dp_if(tokens.shape[0])
+        enc_out = encode(params, batch["frames"], bspec)
+        x, caches = run_decoder_seq(params, enc_out, tokens, bspec, True)
+        logits = unembed(params["embed"], x[:, -1], eps)
+        return logits, caches
+
+    def decode(params, caches, tokens, pos):
+        B = tokens.shape[0]
+        bspec = rules.dp_if(B)
+        x = embed_tokens(params["embed"], tokens[:, 0], cdt)
+        x = x + sinusoids(1, d, offset=pos).astype(cdt)[0]
+        x = wsc(x, bspec, None)
+
+        def body(x, inputs):
+            pl, cache = inputs
+            h = rms_norm(x, pl["ln1"], eps)
+            q = jnp.einsum("bd,dhk->bhk", h, pl["attn"]["wq"].astype(cdt))
+            k = jnp.einsum("bd,dhk->bhk", h, pl["attn"]["wk"].astype(cdt))
+            v = jnp.einsum("bd,dhk->bhk", h, pl["attn"]["wv"].astype(cdt))
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k[:, None], pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v[:, None], pos, axis=1)
+            kc = wsc(kc, bspec, rules.kv_seq, None, None)
+            vc = wsc(vc, bspec, rules.kv_seq, None, None)
+            o = decode_attention(q, kc, vc, pos)
+            x = x + jnp.einsum("bhk,hkd->bd", o, pl["attn"]["wo"].astype(cdt))
+            hx = rms_norm(x, pl["lnx"], eps)
+            qx = jnp.einsum("bd,dhk->bhk", hx, pl["xattn"]["wq"].astype(cdt))
+            ox = decode_attention(qx, cache["xk"], cache["xv"], F - 1)
+            x = x + jnp.einsum("bhk,hkd->bd", ox,
+                               pl["xattn"]["wo"].astype(cdt))
+            x = x + mlp_apply(rms_norm(x, pl["ln2"], eps), pl["ffn"], cfg.act)
+            return x, {"k": kc, "v": vc, "xk": cache["xk"], "xv": cache["xv"]}
+
+        x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+        logits = unembed(params["embed"], x, eps)
+        return logits, new_caches
+
+    # ---------------- cache plumbing ----------------
+    def cache_shapes(batch: int, seq: int):
+        L = cfg.n_layers
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, seq, KH, D), cdt),
+            "v": jax.ShapeDtypeStruct((L, batch, seq, KH, D), cdt),
+            "xk": jax.ShapeDtypeStruct((L, batch, F, KH, D), cdt),
+            "xv": jax.ShapeDtypeStruct((L, batch, F, KH, D), cdt),
+        }
+
+    def cache_specs(batch: int):
+        bspec = rules.dp_if(batch)
+        return {
+            "k": P(None, bspec, rules.kv_seq, None, None),
+            "v": P(None, bspec, rules.kv_seq, None, None),
+            "xk": P(None, bspec, None, None, None),
+            "xv": P(None, bspec, None, None, None),
+        }
+
+    def make_cache(batch: int, seq: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            cache_shapes(batch, seq))
+
+    return Model(cfg=cfg, rules=rules, mesh=mesh, decls=decls, init=init,
+                 param_specs=decl_specs(decls),
+                 param_shapes=decl_shapes(decls, pdt), loss=loss,
+                 prefill=prefill, decode=decode, cache_shapes=cache_shapes,
+                 cache_specs=cache_specs, make_cache=make_cache)

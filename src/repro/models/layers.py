@@ -1,0 +1,389 @@
+"""Shared model-layer machinery: params-as-declarations, norms, RoPE,
+blockwise (flash-style) attention, decode attention over sharded KV caches,
+and MLP variants.
+
+Sharding policy (DESIGN.md §4):
+  * activations are batch-sharded over the data-parallel axes (``rules.dp``);
+  * weights are FSDP-sharded on their input dim (``rules.fsdp``) and
+    TP-sharded on heads / d_ff (``rules.tp``) when divisible;
+  * GQA archs whose KV-head count does not divide the TP axis use
+    sequence-TP attention (Q sequence sharded over ``model``, KV gathered);
+  * decode KV caches shard their sequence dim over ``model`` (``rules.kv_seq``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from functools import partial
+from typing import Callable, Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# Axis rules
+# --------------------------------------------------------------------------
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Maps logical parallelism roles onto mesh axis names."""
+
+    dp: tuple  # batch axes, e.g. ("pod", "data") or ("data",)
+    fsdp: tuple  # weight input-dim sharding axes (ZeRO-3 style)
+    tp: Optional[str]  # tensor-parallel axis ("model")
+    ep: tuple  # expert-parallel axes (MoE EP all-to-all group)
+    kv_seq: Optional[str]  # axis for decode KV-cache sequence sharding
+    sizes: Mapping[str, int]  # mesh axis name -> size
+
+    # -- helpers -----------------------------------------------------------
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return _prod(self.sizes[a] for a in axes)
+
+    @property
+    def dp_size(self) -> int:
+        return self.axis_size(self.dp)
+
+    @property
+    def ep_size(self) -> int:
+        return self.axis_size(self.ep)
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size(self.tp) if self.tp else 1
+
+    def tp_if(self, n: int):
+        """TP axis if ``n`` divides evenly, else None (replicate)."""
+        return self.tp if (self.tp and n % self.sizes[self.tp] == 0) else None
+
+    def fsdp_if(self, n: int):
+        """FSDP axes if ``n`` divides evenly, else None."""
+        if self.fsdp and n % self.axis_size(self.fsdp) == 0:
+            return self.fsdp
+        return None
+
+    def dp_if(self, n: int):
+        if self.dp and n % self.dp_size == 0:
+            return self.dp
+        return None
+
+
+def single_device_rules() -> AxisRules:
+    """Degenerate rules for 1-device smoke meshes."""
+    return AxisRules(
+        dp=("data",), fsdp=("data",), tp="model", ep=("data",),
+        kv_seq="model", sizes={"data": 1, "model": 1},
+    )
+
+
+# --------------------------------------------------------------------------
+# Declarative parameters
+# --------------------------------------------------------------------------
+
+
+class ParamDecl(NamedTuple):
+    shape: tuple
+    spec: P
+    init: str = "normal"  # "normal" | "ones" | "zeros"
+    std: float = 0.02
+
+
+def _name_seed(rng, name: str):
+    return jax.random.fold_in(rng, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def build_params(decls: Mapping[str, "ParamDecl | Mapping"], rng, dtype):
+    """Materialize a (possibly nested) declaration tree into arrays."""
+    out = {}
+    for name, d in decls.items():
+        if isinstance(d, Mapping):
+            out[name] = build_params(d, _name_seed(rng, name), dtype)
+        elif d.init == "ones":
+            out[name] = jnp.ones(d.shape, dtype)
+        elif d.init == "zeros":
+            out[name] = jnp.zeros(d.shape, dtype)
+        else:
+            k = _name_seed(rng, name)
+            out[name] = (jax.random.normal(k, d.shape, jnp.float32) * d.std).astype(dtype)
+    return out
+
+
+def decl_specs(decls):
+    out = {}
+    for name, d in decls.items():
+        out[name] = decl_specs(d) if isinstance(d, Mapping) else d.spec
+    return out
+
+
+def decl_shapes(decls, dtype):
+    out = {}
+    for name, d in decls.items():
+        if isinstance(d, Mapping):
+            out[name] = decl_shapes(d, dtype)
+        else:
+            out[name] = jax.ShapeDtypeStruct(d.shape, dtype)
+    return out
+
+
+def stack_decls(decls, n_layers: int):
+    """Prefix every leaf with a layer dim (for lax.scan over the stack)."""
+    out = {}
+    for name, d in decls.items():
+        if isinstance(d, Mapping):
+            out[name] = stack_decls(d, n_layers)
+        else:
+            out[name] = ParamDecl((n_layers,) + tuple(d.shape),
+                                  P(*((None,) + tuple(d.spec))), d.init, d.std)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Primitive layers
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_apply(x, p, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w1"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]
+
+
+def mlp_decls(cfg, rules: AxisRules) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    fs, tp = rules.fsdp_if(d), rules.tp_if(f)
+    out_std = 0.02 / np.sqrt(2 * max(cfg.n_layers, 1))
+    decls = {
+        "w1": ParamDecl((d, f), P(fs, tp)),
+        "w2": ParamDecl((f, d), P(tp, fs), std=out_std),
+    }
+    if cfg.act == "swiglu":
+        decls["w3"] = ParamDecl((d, f), P(fs, tp))
+    return decls
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+def attn_decls(cfg, rules: AxisRules, name_std: Optional[float] = None) -> dict:
+    d, H, KH, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    fs = rules.fsdp_if(d)
+    # head-TP only when the *KV* head count divides the TP axis; otherwise the
+    # sequence-TP path is used and heads stay replicated.
+    head_tp = rules.tp_if(KH) if rules.tp_if(H) else None
+    q_tp = rules.tp_if(H) if head_tp else None
+    out_std = name_std or 0.02 / np.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "wq": ParamDecl((d, H, D), P(fs, q_tp, None)),
+        "wk": ParamDecl((d, KH, D), P(fs, head_tp, None)),
+        "wv": ParamDecl((d, KH, D), P(fs, head_tp, None)),
+        "wo": ParamDecl((H, D, d), P(q_tp, None, fs), std=out_std),
+    }
+
+
+def attention_uses_head_tp(cfg, rules: AxisRules) -> bool:
+    return bool(rules.tp_if(cfg.n_kv_heads) and rules.tp_if(cfg.n_heads))
+
+
+def flash_attention_xla(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                        chunk: int = 1024, score_dtype=jnp.float32):
+    """Blockwise attention (XLA-native flash): scan over KV chunks carrying
+    running (max, sum, acc). Memory is O(S_q * chunk), never O(S_q * S_kv).
+
+    q: (B, Sq, H, D); k/v: (B, Skv, KH, D); GQA via H = KH * G.
+    ``q_offset``: absolute position of q[0] (prefill continuation / seq-TP).
+    ``window`` > 0 restricts attention to the last ``window`` positions (SWA).
+
+    The chunk body is rematerialized (jax.checkpoint): without it the scan
+    transpose stacks every chunk's (Sq, chunk) score/probability tensors as
+    backward residuals — measured at ~2 TB of HBM traffic per train step on
+    the 4k cells (EXPERIMENTS.md §Perf iteration W1). Recomputing the chunk
+    from (q, kc, vc) costs ~1 extra attention forward, pure MXU slack on
+    every memory-bound cell.
+    """
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = 1.0 / np.sqrt(D)
+    qr = q.reshape(B, Sq, KH, G, D)
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    if Skv % chunk:  # pad KV to a chunk multiple; padding is masked out
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    q_pos = q_offset + jnp.arange(Sq)
+
+    sdt = jnp.dtype(score_dtype)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inputs):
+        acc, m, l = carry
+        kc, vc, c_start = inputs
+        # scores in ``score_dtype`` — bf16 halves the dominant HBM stream
+        # on memory-bound cells (§Perf W2); running max/sum stay fp32.
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qr, kc,
+                       preferred_element_type=sdt) * jnp.asarray(scale, sdt)
+        kv_pos = c_start + jnp.arange(chunk)
+        mask = jnp.broadcast_to(kv_pos[None, :] < Skv, (Sq, chunk))
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        # masked lanes hold s == -inf, so exp() already gives exactly 0 —
+        # no second where() materialization needed
+        p = jnp.exp(s - m_safe[..., None].astype(sdt))
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    kc = k.reshape(B, n_chunks, chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(n_chunks) * chunk
+    acc0 = jnp.zeros((B, Sq, KH, G, D), jnp.float32)
+    m0 = jnp.full((B, Sq, KH, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KH, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     slot_pos=None):
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, H, D); caches: (B, S, KH, D); ``pos``: scalar absolute position of
+    the current token. With ``window``/``slot_pos`` the cache is a ring buffer
+    and ``slot_pos[b, s]`` holds each slot's absolute position.
+    """
+    B, H, D = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    scale = 1.0 / np.sqrt(D)
+    qr = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bkgd,bckd->bkgc", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    S = k_cache.shape[1]
+    if slot_pos is None:
+        valid = (jnp.arange(S) <= pos)[None, :]
+    else:
+        valid = (slot_pos <= pos)
+        if window:
+            valid &= slot_pos > pos - window
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / p.sum(axis=-1, keepdims=True)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def embed_decls(cfg, rules: AxisRules) -> dict:
+    V, d = cfg.vocab_padded, cfg.d_model
+    return {
+        "tok": ParamDecl((V, d), P(rules.tp_if(V), rules.fsdp_if(d))),
+        "out": ParamDecl((d, V), P(rules.fsdp_if(d), rules.tp_if(V)),
+                         std=0.02 / np.sqrt(max(cfg.n_layers, 1))),
+        "ln_f": ParamDecl((d,), P(None), init="ones"),
+    }
+
+
+def embed_tokens(emb, tokens, compute_dtype):
+    return jnp.take(emb["tok"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(emb, x, eps: float):
+    h = rms_norm(x, emb["ln_f"], eps)
+    return (h @ emb["out"]).astype(jnp.float32)
+
+
+def token_xent(logits, labels, mask=None):
+    """Stable masked cross-entropy. logits fp32 (B, S, V); labels int (B, S).
+
+    The label pick uses an iota-select instead of take_along_axis: a gather
+    over the vocab dim forces GSPMD to all-gather V-sharded logits (the
+    full (B, S, V) fp32 tensor — measured as the dominant HBM+wire term on
+    big-vocab cells, §Perf W5), while the select contracts locally and
+    reduces a scalar per token."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None].astype(jnp.int32),
+                       logits, 0.0)
+    ll = picked.sum(axis=-1)
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Sharding-constraint helper
+# --------------------------------------------------------------------------
+
+
+def make_wsc(mesh):
+    """Returns wsc(x, *spec) applying a NamedSharding constraint, or identity
+    when ``mesh`` is None (pure-eager smoke paths)."""
+    if mesh is None:
+        return lambda x, *spec: x
+    from jax.sharding import NamedSharding
+
+    def wsc(x, *spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+    return wsc

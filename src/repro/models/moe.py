@@ -1,0 +1,325 @@
+"""Mixture-of-Experts FFN with explicit collective scheduling.
+
+Two sharding modes (DESIGN.md §4/§6):
+
+* ``"ep"`` — experts sharded over the data-parallel axes; token dispatch is an
+  explicit ``jax.lax.all_to_all`` over those axes inside a fully-manual
+  ``shard_map``. This is the paper's AlltoAll congestion pattern running as a
+  first-class training collective (kimi-k2: 384 experts / 16- or 32-way EP).
+* ``"2d"`` — experts replicated across data-parallel shards; expert weights
+  stored FSDP-sharded on d_model and TP-sharded on d_ff, all-gathered per
+  layer (grok-1: 8 experts do not divide the EP axis).
+
+Memory discipline: dispatch buffers carry only the local ``model``-axis slice
+of d_model (d/16), so the in-flight all-to-all payload is (E, C, d/16) — never
+(E, C, d). The d-contraction is completed with one psum (up) and one
+psum_scatter (down) over the TP axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import AxisRules, ParamDecl
+
+
+def moe_decls(cfg, rules: AxisRules) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    tp = rules.tp_if(f)
+    out_std = 0.02 / np.sqrt(2 * max(cfg.n_layers, 1))
+    if cfg.moe_sharding == "ep":
+        ep = rules.ep
+        assert E % rules.ep_size == 0, (E, rules.ep_size)
+        w_in_spec = P(ep, None, tp)
+        w_out_spec = P(ep, tp, None)
+    elif cfg.moe_sharding == "ep_sp":
+        # full EP compute with tokens sequence-sharded over model. Expert
+        # weights are STORED f-sharded over model (replicating a 1T-param
+        # expert bank over 16 model ranks costs 129 GB/device — measured,
+        # §Perf K1a) and all-gathered per layer inside the body; the
+        # gather is ~10x cheaper than the TP reduce-scatter it replaces.
+        ep = rules.ep
+        assert E % rules.ep_size == 0, (E, rules.ep_size)
+        w_in_spec = P(ep, None, tp)
+        w_out_spec = P(ep, tp, None)
+    else:  # 2d / 2d_full
+        fs = rules.fsdp_if(d)
+        w_in_spec = P(None, fs, tp)
+        w_out_spec = P(None, tp, fs)
+    return {
+        "router": ParamDecl((d, E), P(None, None)),
+        "w1": ParamDecl((E, d, f), w_in_spec),
+        "w3": ParamDecl((E, d, f), w_in_spec),
+        "w2": ParamDecl((E, f, d), w_out_spec, std=out_std),
+    }
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _dispatch_indices(gates, top_k: int, capacity: int):
+    """Token->(expert, slot) assignment with per-shard capacity.
+
+    Returns (flat_expert (N,), slot (N,), combine_w (N,)) with slot == capacity
+    for dropped assignments (N = T * top_k).
+    """
+    T, E = gates.shape
+    topv, topi = jax.lax.top_k(gates, top_k)  # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    flat_e = topi.reshape(-1)
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    slot = jnp.where(pos < capacity, pos, capacity)
+    return flat_e, slot, topv.reshape(-1)
+
+
+def _aux_loss(gates, flat_e, top_k: int):
+    """Switch-style load-balancing loss (mean over shards taken by caller)."""
+    T, E = gates.shape
+    frac = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (T * top_k)
+    mean_prob = gates.mean(axis=0)
+    return E * jnp.sum(frac * mean_prob)
+
+
+def _activate(h, act):
+    if act == "swiglu":
+        h1, h3 = jnp.split(h, 2, axis=-1)
+        return jax.nn.silu(h1) * h3
+    if act == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    return jax.nn.gelu(h)
+
+
+def _psum_scatter_bf16(o, axis_name: str, n: int):
+    """reduce-scatter of ``o`` (E, C, d) over its last dim with the wire in
+    o's own dtype. An XLA reduce-scatter of a just-downcast bf16 tensor is
+    re-promoted to an f32 wire by the excess-precision simplification
+    (measured: §Perf G2) — an all_to_all moves raw bf16 payload instead,
+    and the receive side sums the n=16 partials locally. The sum stays in
+    o.dtype so the simplifier has no f32 round-trip to cancel; a 16-way
+    bf16 tree-sum adds <=4 ulps, comparable to bf16 gradient all-reduce."""
+    E, C, d = o.shape
+    parts = o.reshape(E, C, n, d // n)
+    # split over ranks: rank r receives every rank's r-th d-slice stacked
+    parts = jax.lax.all_to_all(parts, axis_name, split_axis=2, concat_axis=0,
+                               tiled=True)  # (n*E, C, 1, d/n) rank-major
+    parts = parts.reshape(n, E, C, d // n)
+    return jnp.sum(parts, axis=0)  # (E, C, d/n) in o.dtype
+
+
+def moe_ffn(x, p, cfg, rules: AxisRules, mesh):
+    """Apply the MoE FFN to x: (B, S, d) batch-sharded over ``rules.dp``
+    (and sequence-sharded over ``rules.tp`` in "ep_sp" mode).
+
+    Modes (DESIGN.md §4/§6, EXPERIMENTS.md §Perf G1/K1):
+      * "ep"      — experts over data axis, d-sliced dispatch, TP up/down.
+      * "2d"      — experts replicated, d-sliced dispatch, TP up/down
+                    (paper-faithful baseline for E < tp_size).
+      * "2d_full" — experts replicated, FULL-d dispatch buffer: the up
+                    projection completes locally per f-slice (no psum); only
+                    the down projection reduce-scatters, in compute_dtype.
+      * "ep_sp"   — full EP with sequence-sharded tokens: experts replicated
+                    over model, a2a over data only, no TP collectives.
+
+    Returns (out (B, S, d), aux_loss scalar).
+    """
+    E, k, d, f = cfg.n_experts, cfg.top_k, cfg.d_model, cfg.d_ff
+    mode = cfg.moe_sharding
+    tp_ax = rules.tp
+    tp_sz = rules.tp_size
+    ep_ax = rules.ep
+    ep_sz = rules.ep_size if mode in ("ep", "ep_sp") else 1
+    d_loc = d // tp_sz
+    f_loc = f // tp_sz if rules.tp_if(f) else f
+    act = cfg.act
+    cf = cfg.capacity_factor
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+
+    decls = moe_decls(cfg, rules)
+    # sequence-sharded dispatch only when S divides the model axis. Decode
+    # steps (S == 1) fall back to the "ep" compute path: the ep_sp weight
+    # layout (E over ep, f over tp) is identical to "ep", and moving the
+    # single token through TP psums costs ~nothing while the ep_sp per-
+    # layer weight gather costs 274 GB/token on kimi (measured, §Perf K6).
+    sp_ok = (mode == "ep_sp" and tp_ax
+             and x.shape[1] % max(rules.sizes.get(tp_ax, 1), 1) == 0)
+    if mode == "ep_sp" and not sp_ok:
+        mode = "ep"
+    x_spec = (P(rules.dp, tp_ax, None) if sp_ok
+              else P(rules.dp, None, None))
+    in_specs = (
+        x_spec,
+        decls["router"].spec,
+        decls["w1"].spec,
+        decls["w3"].spec,
+        decls["w2"].spec,
+    )
+    out_specs = (x_spec, P())
+    aux_axes = (rules.dp + (tp_ax,)) if sp_ok else rules.dp
+
+    def dispatch(xf, gates, C, flat_e, slot, dd):
+        """Scatter token rows (dd-wide) into the (E, C, dd) expert buffer."""
+        T = xf.shape[0]
+        tok = jnp.arange(T * k, dtype=jnp.int32) // k
+        vals = xf[tok].astype(compute_dtype)
+        buf = jnp.zeros((E, C + 1, dd), compute_dtype).at[flat_e, slot].set(vals)
+        return buf[:, :C]
+
+    def combine(o, flat_e, slot, comb_w, T, dd):
+        o_pad = jnp.concatenate(
+            [o, jnp.zeros((E, 1, dd), o.dtype)], axis=1)  # slot C == dropped
+        picked = o_pad[flat_e, slot] * comb_w[:, None].astype(o.dtype)
+        return picked.reshape(T, k, dd).sum(axis=1)
+
+    def body(xl, wr, w1, w3, w2):
+        B_loc, S_loc, _ = xl.shape
+        T = B_loc * S_loc
+        xf = xl.reshape(T, d)
+        # bf16 operands with f32 accumulation: an f32 upcast here makes the
+        # whole dispatch cotangent f32, doubling its psum wire (§Perf G2)
+        gates = jax.nn.softmax(jnp.einsum(
+            "td,de->te", xf, wr.astype(xf.dtype),
+            preferred_element_type=jnp.float32))
+        C = max(8, _round_up(int(np.ceil(T * k / E * cf)), 8))
+        flat_e, slot, comb_w = _dispatch_indices(gates, k, C)
+        aux = _aux_loss(gates, flat_e, k)
+        aux = jax.lax.pmean(aux, aux_axes)
+
+        if mode == "ep_sp":
+            # full-d dispatch, a2a over the data axis only; experts compute
+            # with per-layer tp-gathered (d, f) weights — the only model-
+            # axis traffic is the weight gather (§Perf K1)
+            w1l = jax.lax.all_gather(w1, tp_ax, axis=2, tiled=True) \
+                if tp_sz > 1 else w1          # (E_loc, d, f)
+            w3l = jax.lax.all_gather(w3, tp_ax, axis=2, tiled=True) \
+                if tp_sz > 1 else w3
+            w2l = jax.lax.all_gather(w2, tp_ax, axis=1, tiled=True) \
+                if tp_sz > 1 else w2          # (E_loc, f, d)
+            buf = dispatch(xf, gates, C, flat_e, slot, d)  # (E, C, d)
+            if ep_sz > 1:
+                buf = jax.lax.all_to_all(buf, ep_ax, 0, 1, tiled=True)
+            h1 = jnp.einsum("ecd,edf->ecf", buf, w1l.astype(compute_dtype),
+                            preferred_element_type=jnp.float32)
+            if act == "swiglu":
+                h3 = jnp.einsum("ecd,edf->ecf", buf,
+                                w3l.astype(compute_dtype),
+                                preferred_element_type=jnp.float32)
+                h = jnp.concatenate([h1, h3], axis=-1)
+            else:
+                h = h1
+            hh = _activate(h, act).astype(compute_dtype)
+            o = jnp.einsum("ecf,efd->ecd", hh, w2l.astype(compute_dtype),
+                           preferred_element_type=jnp.float32)
+            o = o.astype(compute_dtype)
+            if ep_sz > 1:
+                o = jax.lax.all_to_all(o, ep_ax, 1, 0, tiled=True)
+            out = combine(o, flat_e, slot, comb_w, T, d)
+            return out.reshape(B_loc, S_loc, d).astype(xl.dtype), aux
+
+        if mode == "2d_full":
+            # full-d dispatch buffer: each TP rank computes its f-slice
+            # COMPLETELY (w1 gathered (E, d, f_loc)) — the up-projection
+            # psum disappears; only the down projection reduces, and it
+            # does so in compute_dtype, not fp32 (§Perf G1)
+            fs_axes = rules.fsdp_if(d)
+            w1l = jax.lax.all_gather(w1, fs_axes, axis=1, tiled=True) \
+                if fs_axes else w1
+            w3l = jax.lax.all_gather(w3, fs_axes, axis=1, tiled=True) \
+                if fs_axes else w3
+            w2l = jax.lax.all_gather(w2, fs_axes, axis=2, tiled=True) \
+                if fs_axes else w2
+            buf = dispatch(xf, gates, C, flat_e, slot, d)  # (E, C, d)
+            h1 = jnp.einsum("ecd,edf->ecf", buf, w1l.astype(compute_dtype),
+                            preferred_element_type=jnp.float32)
+            if act == "swiglu":
+                h3 = jnp.einsum("ecd,edf->ecf", buf,
+                                w3l.astype(compute_dtype),
+                                preferred_element_type=jnp.float32)
+                h = jnp.concatenate([h1, h3], axis=-1)
+            else:
+                h = h1
+            hh = _activate(h, act).astype(compute_dtype)
+            o = jnp.einsum("ecf,efd->ecd", hh, w2l.astype(compute_dtype),
+                           preferred_element_type=jnp.float32)
+            o = o.astype(compute_dtype)
+            if tp_sz > 1:
+                # a2a + local sum == reduce-scatter with a bf16 wire
+                o = _psum_scatter_bf16(o, tp_ax, tp_sz)
+            out_slice = combine(o, flat_e, slot, comb_w, T,
+                                d_loc if tp_sz > 1 else d)
+            if tp_sz > 1:
+                out = jax.lax.all_gather(out_slice, tp_ax, axis=1, tiled=True)
+            else:
+                out = out_slice
+            return out.reshape(B_loc, S_loc, d).astype(xl.dtype), aux
+
+        # ---- "ep" / "2d": d-sliced dispatch + TP up/down (baseline) ----
+        r = jax.lax.axis_index(tp_ax) if tp_sz > 1 else 0
+        x_slice = jax.lax.dynamic_slice_in_dim(xf, r * d_loc, d_loc, axis=1)
+        buf = dispatch(x_slice, gates, C, flat_e, slot, d_loc)  # (E, C, d_loc)
+
+        if mode == "ep" and ep_sz > 1:
+            buf = jax.lax.all_to_all(buf, ep_ax, split_axis=0, concat_axis=1,
+                                     tiled=True)  # (E_loc, ep*C, d_loc)
+
+        # --- expert weights: local d-slice of (E?, d, f_loc) ---
+        if mode == "ep":
+            w1l, w3l, w2l = w1, w3, w2  # (E_loc, d, f_loc), (E_loc, f_loc, d)
+        else:
+            fs_axes = rules.fsdp_if(d)
+            if fs_axes:
+                w1l = jax.lax.all_gather(w1, fs_axes, axis=1, tiled=True)
+                w3l = jax.lax.all_gather(w3, fs_axes, axis=1, tiled=True)
+                w2l = jax.lax.all_gather(w2, fs_axes, axis=2, tiled=True)
+            else:
+                w1l, w3l, w2l = w1, w3, w2
+        w1s = jax.lax.dynamic_slice_in_dim(w1l, r * d_loc, d_loc, axis=1)
+        w3s = jax.lax.dynamic_slice_in_dim(w3l, r * d_loc, d_loc, axis=1)
+
+        # up-projection: contract the local d-slice, then complete with
+        # psum. The per-rank partials are f32 accumulations; the cross-rank
+        # reduction moves compute_dtype (bf16 wire — §Perf G4).
+        h1 = jnp.einsum("ecd,edf->ecf", buf, w1s.astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+        if act == "swiglu":
+            h3 = jnp.einsum("ecd,edf->ecf", buf, w3s.astype(compute_dtype),
+                            preferred_element_type=jnp.float32)
+            h = jnp.concatenate([h1, h3], axis=-1)
+        else:
+            h = h1
+        if tp_sz > 1:
+            h = jax.lax.psum(h.astype(compute_dtype), tp_ax)
+        hh = _activate(h, act).astype(compute_dtype)
+
+        # down-projection: partial over f_loc, reduce-scatter d over TP
+        # (compute_dtype on the wire)
+        o = jnp.einsum("ecf,efd->ecd", hh, w2l.astype(compute_dtype),
+                       preferred_element_type=jnp.float32)
+        o = o.astype(compute_dtype)
+        if tp_sz > 1:
+            o = jax.lax.psum_scatter(o, tp_ax, scatter_dimension=2, tiled=True)
+
+        if mode == "ep" and ep_sz > 1:
+            o = jax.lax.all_to_all(o, ep_ax, split_axis=1, concat_axis=0,
+                                   tiled=True)  # (E, C, d_loc)
+
+        out_slice = combine(o, flat_e, slot, comb_w, T, d_loc)
+        if tp_sz > 1:
+            out = jax.lax.all_gather(out_slice, tp_ax, axis=1, tiled=True)
+        else:
+            out = out_slice
+        return out.reshape(B_loc, S_loc, d).astype(xl.dtype), aux
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+    return fn(x, p["router"], p["w1"], p["w3"], p["w2"])

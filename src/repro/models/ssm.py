@@ -1,0 +1,143 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b; also used by hymba hybrid).
+
+Training/prefill uses a chunked associative scan: ``lax.scan`` over sequence
+chunks carrying the SSM state, with a parallel ``associative_scan`` inside the
+chunk — the hidden state (B, chunk, d_inner, N) is materialized only per
+chunk, never for the full sequence. Decode is a single O(1) state update,
+which is what makes the ``long_500k`` cell sub-quadratic (DESIGN.md §6).
+
+Sharding: d_inner is TP-sharded over ``model``; everything inside the scan is
+elementwise in d_inner, so the only collectives are the in/out projections'
+FSDP weight gathers and the out-projection psum (handled by GSPMD).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import AxisRules, ParamDecl
+
+
+def ssm_decls(cfg, rules: AxisRules) -> dict:
+    d = cfg.d_model
+    di, n, r, W = (cfg.resolved_d_inner, cfg.ssm_state,
+                   cfg.resolved_dt_rank, cfg.conv_width)
+    fs, tp = rules.fsdp_if(d), rules.tp_if(di)
+    out_std = 0.02 / np.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "in_proj": ParamDecl((d, 2 * di), P(fs, tp)),
+        "conv_w": ParamDecl((di, W), P(tp, None), std=0.1),
+        "conv_b": ParamDecl((di,), P(tp), init="zeros"),
+        "x_proj": ParamDecl((di, r + 2 * n), P(tp, None)),
+        "dt_proj": ParamDecl((r, di), P(None, tp), std=0.1),
+        "dt_bias": ParamDecl((di,), P(tp), init="zeros"),
+        "a_log": ParamDecl((di, n), P(tp, None), init="ones"),
+        "d_skip": ParamDecl((di,), P(tp), init="ones"),
+        "out_proj": ParamDecl((di, d), P(tp, fs), std=out_std),
+    }
+
+
+def _ssm_coeffs(x1, p, cfg):
+    """From conv'd activations x1 (..., di) compute (dA, dBx, C) fp32."""
+    n, r = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = x1 @ p["x_proj"]  # (..., r + 2n)
+    dt_r, B, C = jnp.split(proj.astype(jnp.float32), [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (..., di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, n)
+    dA = jnp.exp(dt[..., None] * A)  # (..., di, n)
+    dBx = (dt * x1.astype(jnp.float32))[..., None] * B[..., None, :]
+    return dA, dBx, C
+
+
+def _causal_conv(x, p, W: int):
+    """Depthwise causal conv via W shifted adds. x: (B, S, di)."""
+    out = x * p["conv_w"][:, W - 1]
+    for w in range(W - 1):
+        shift = W - 1 - w
+        out += jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]] \
+            * p["conv_w"][:, w]
+    return out + p["conv_b"]
+
+
+def ssm_apply_seq(p, x, cfg, *, chunk: int = 256, h0=None, conv_state=None):
+    """Full-sequence SSM. x: (B, S, d_model). Returns (y, final_cache)."""
+    B, S, _ = x.shape
+    di, n, W = cfg.resolved_d_inner, cfg.ssm_state, cfg.conv_width
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)  # (B, S, di)
+    if conv_state is not None:  # continuation: prepend cached tail
+        x1_ext = jnp.concatenate([conv_state, x1], axis=1)
+        xc = _causal_conv(x1_ext, p, W)[:, W - 1:]
+    else:
+        xc = _causal_conv(x1, p, W)
+    xc = jax.nn.silu(xc)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    xcs = xc.reshape(B, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+
+    # the chunk body is rematerialized: without it the scan transpose
+    # stacks the associative-scan tree ((B, chunk, d_inner, N) at every
+    # level) as backward residuals — measured 193s -> 118s memory term on
+    # falcon-mamba train_4k (§Perf F1). A per-timestep sequential scan was
+    # also tried and refuted (810s — XLA residual stacking per step); the
+    # TPU deploy path is the fused Pallas kernel (kernels/ssm_scan.py).
+    @partial(jax.checkpoint, prevent_cse=False)
+    def body(h, xc_c):
+        dA, dBx, C = _ssm_coeffs(xc_c, p, cfg)  # (B, c, di, n) fp32
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        Acum, Bcum = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+        hs = Acum * h[:, None] + Bcum  # (B, c, di, n)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C)
+        return hs[:, -1], y
+
+    h = jnp.zeros((B, di, n), jnp.float32) if h0 is None else h0
+    h, ys = jax.lax.scan(body, h, xcs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = (y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    cache = {"conv": x1[:, S - (W - 1):, :], "ssm": h}
+    return out, cache
+
+
+def ssm_apply_decode(p, x, cache, cfg):
+    """Single-token SSM step. x: (B, d_model); cache: {conv (B,W-1,di), ssm}."""
+    W = cfg.conv_width
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+    win = jnp.concatenate([cache["conv"], x1[:, None]], axis=1)  # (B, W, di)
+    xc = jnp.einsum("bwd,dw->bd", win, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dA, dBx, C = _ssm_coeffs(xc, p, cfg)  # (B, di, n), (B, n)
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C)
+    y = (y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"conv": win[:, 1:], "ssm": h}
+
+
+def ssm_cache_shape(cfg, batch: int, dtype):
+    di, n, W = cfg.resolved_d_inner, cfg.ssm_state, cfg.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, W - 1, di), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, di, n), jnp.float32),
+    }
+
+
+def ssm_cache_specs(cfg, rules: AxisRules, bspec=None):
+    di = cfg.resolved_d_inner
+    tp = rules.tp_if(di)
+    return {"conv": P(bspec, None, tp), "ssm": P(bspec, tp, None)}

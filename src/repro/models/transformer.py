@@ -1,0 +1,332 @@
+"""Generic decoder-only LM covering the dense / moe / vlm / hybrid / ssm
+families. One scan-over-layers stack with pluggable attention, SSM, and FFN
+sub-blocks; three entry points (train loss, prefill, decode) per DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    AxisRules, ParamDecl, attention_uses_head_tp, attn_decls, build_params,
+    decl_specs, decl_shapes, decode_attention, embed_decls, embed_tokens,
+    flash_attention_xla, make_wsc, mlp_apply, mlp_decls, rms_norm, rope,
+    stack_decls, token_xent, unembed,
+)
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+    rules: AxisRules
+    mesh: Any
+    decls: dict
+    init: Callable
+    param_specs: Any
+    param_shapes: Any
+    loss: Callable  # (params, batch) -> (scalar, metrics)
+    prefill: Callable  # (params, batch) -> (logits, cache)
+    decode: Callable  # (params, cache, tokens, pos) -> (logits, cache)
+    cache_shapes: Callable  # (batch, seq) -> pytree of ShapeDtypeStruct
+    cache_specs: Callable  # () -> pytree of PartitionSpec
+    make_cache: Callable  # (batch, seq) -> zero-filled cache
+
+
+def _scan_layers(body, carry, xs, remat: str):
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.lax.scan(body, carry, xs)
+
+
+def build_decoder_lm(cfg, rules: AxisRules, mesh) -> Model:
+    wsc = make_wsc(mesh)
+    head_tp = attention_uses_head_tp(cfg, rules)
+    has_attn = cfg.family != "ssm"
+    has_ssm = cfg.ssm_state > 0
+    has_mlp = cfg.d_ff > 0
+    is_moe = cfg.n_experts > 0
+    is_vlm = cfg.family == "vlm"
+    window = cfg.sliding_window
+    eps = cfg.norm_eps
+    cdt = jnp.dtype(cfg.compute_dtype)
+    D = cfg.resolved_head_dim
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+    # sequence parallelism: the residual stream keeps S sharded over the
+    # model axis between layers (activation memory and HBM traffic drop
+    # tp-fold; pairs with the "ep_sp" MoE mode) — §Perf K1
+    assert not (cfg.seq_shard and has_ssm), \
+        "seq_shard is incompatible with sequential SSM state"
+    sp = rules.tp if cfg.seq_shard else None
+
+    # ---------------- declarations ----------------
+    block: dict = {"ln1": ParamDecl((cfg.d_model,), P(None), init="ones")}
+    if has_attn:
+        block["attn"] = attn_decls(cfg, rules)
+    if has_ssm:
+        block["ssm"] = ssm_lib.ssm_decls(cfg, rules)
+    if has_mlp:
+        block["ln2"] = ParamDecl((cfg.d_model,), P(None), init="ones")
+        block["ffn"] = (moe_lib.moe_decls(cfg, rules) if is_moe
+                        else mlp_decls(cfg, rules))
+    decls = {"embed": embed_decls(cfg, rules),
+             "layers": stack_decls(block, cfg.n_layers)}
+
+    pdt = jnp.dtype(cfg.param_dtype)
+    specs = decl_specs(decls)
+    shapes = decl_shapes(decls, pdt)
+
+    def init(rng):
+        return build_params(decls, rng, pdt)
+
+    # ---------------- attention ----------------
+    def attn_seq(pl, x, bspec, emit_cache: bool):
+        """Full-sequence attention (train/prefill). x: (B, S, d)."""
+        B, S, _ = x.shape
+        if head_tp:
+            x = wsc(x, bspec, None, None)
+        else:
+            x = wsc(x, bspec, rules.tp, None)  # sequence-TP
+        q = jnp.einsum("bsd,dhk->bshk", x, pl["wq"].astype(cdt))
+        k = jnp.einsum("bsd,dhk->bshk", x, pl["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", x, pl["wv"].astype(cdt))
+        if not head_tp:
+            # pin the projections to the S-shard BEFORE the KV gather:
+            # without this GSPMD gathers x to full S and every model rank
+            # runs the full-S projection (+ its full-S f32 backward) —
+            # measured at ~7 TB/step of HBM traffic (§Perf K4/G5)
+            q = wsc(q, bspec, rules.tp, None, None)
+            k = wsc(k, bspec, rules.tp, None, None)
+            v = wsc(v, bspec, rules.tp, None, None)
+        pos = jnp.arange(S)[None]
+        q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+        if head_tp:
+            q = wsc(q, bspec, None, rules.tp_if(H), None)
+            k = wsc(k, bspec, None, rules.tp_if(KH), None)
+            v = wsc(v, bspec, None, rules.tp_if(KH), None)
+        else:
+            q = wsc(q, bspec, rules.tp, None, None)
+            k = wsc(k, bspec, None, None, None)  # gather KV over model
+            v = wsc(v, bspec, None, None, None)
+        o = flash_attention_xla(q, k, v, causal=True, window=window,
+                                chunk=cfg.attn_chunk,
+                                score_dtype=cfg.score_dtype)
+        out = jnp.einsum("bshk,hkd->bsd", o, pl["wo"].astype(cdt))
+        out = wsc(out, bspec, sp, None)
+        cache = None
+        if emit_cache:
+            if window:
+                w_eff = min(window, S)
+                positions = jnp.arange(S - w_eff, S)
+                slots = positions % window
+                ring = lambda t: jnp.zeros(
+                    (B, window) + t.shape[2:], t.dtype).at[:, slots].set(
+                        t[:, -w_eff:])
+                slot_pos = jnp.full((window,), -(2 ** 30), jnp.int32
+                                    ).at[slots].set(positions)
+                cache = {"k": wsc(ring(k), bspec, rules.kv_seq, None, None),
+                         "v": wsc(ring(v), bspec, rules.kv_seq, None, None),
+                         "slot_pos": slot_pos}
+            else:
+                cache = {"k": wsc(k, bspec, rules.kv_seq, None, None),
+                         "v": wsc(v, bspec, rules.kv_seq, None, None)}
+        return out, cache
+
+    def attn_dec(pl, x, cache, pos, bspec):
+        """Single-token attention. x: (B, d)."""
+        B = x.shape[0]
+        q = jnp.einsum("bd,dhk->bhk", x, pl["wq"].astype(cdt))
+        k = jnp.einsum("bd,dhk->bhk", x, pl["wk"].astype(cdt))
+        v = jnp.einsum("bd,dhk->bhk", x, pl["wv"].astype(cdt))
+        posb = jnp.full((1, 1), pos)
+        q = rope(q[:, None], posb, cfg.rope_theta)[:, 0]
+        k = rope(k[:, None], posb, cfg.rope_theta)[:, 0]
+        if window:
+            slot = pos % window
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k[:, None], slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v[:, None], slot, axis=1)
+            sp = jax.lax.dynamic_update_slice_in_dim(
+                cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0)
+            new_cache = {"k": kc, "v": vc, "slot_pos": sp}
+            o = decode_attention(q, kc, vc, pos, window=window,
+                                 slot_pos=sp[None])
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k[:, None], pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v[:, None], pos, axis=1)
+            kc = wsc(kc, bspec, rules.kv_seq, None, None)
+            vc = wsc(vc, bspec, rules.kv_seq, None, None)
+            new_cache = {"k": kc, "v": vc}
+            o = decode_attention(q, kc, vc, pos)
+        out = jnp.einsum("bhk,hkd->bd", o, pl["wo"].astype(cdt))
+        return out, new_cache
+
+    # ---------------- block bodies ----------------
+    def ffn_apply(pl, x, bspec):
+        if is_moe:
+            return moe_lib.moe_ffn(x, pl["ffn"], cfg, rules, mesh)
+        x = wsc(x, bspec, sp, None)
+        return mlp_apply(x, pl["ffn"], cfg.act), 0.0
+
+    def seq_block(pl, x, bspec, emit_cache):
+        h = rms_norm(x, pl["ln1"], eps)
+        cache = {}
+        if has_attn and has_ssm:  # hybrid: parallel heads
+            ao, kv = attn_seq(pl["attn"], h, bspec, emit_cache)
+            so, sc = ssm_lib.ssm_apply_seq(pl["ssm"], h, cfg)
+            x = x + (ao + so) * 0.5
+            if emit_cache:
+                cache = dict(kv, **sc)
+        elif has_attn:
+            ao, kv = attn_seq(pl["attn"], h, bspec, emit_cache)
+            x = x + ao
+            if emit_cache:
+                cache = kv
+        else:  # pure ssm
+            so, sc = ssm_lib.ssm_apply_seq(pl["ssm"], h, cfg)
+            x = x + so
+            if emit_cache:
+                cache = sc
+        aux = jnp.zeros((), jnp.float32)
+        if has_mlp:
+            h2 = rms_norm(x, pl["ln2"], eps)
+            f, aux = ffn_apply(pl, h2, bspec)
+            x = x + f
+        return x, cache, aux
+
+    def dec_block(pl, x, cache, pos, bspec):
+        h = rms_norm(x, pl["ln1"], eps)
+        new_cache = {}
+        if has_attn and has_ssm:
+            ao, kvc = attn_dec(pl["attn"], h, cache, pos, bspec)
+            so, sc = ssm_lib.ssm_apply_decode(pl["ssm"], h, cache, cfg)
+            x = x + (ao + so) * 0.5
+            new_cache = dict(kvc, **sc)
+        elif has_attn:
+            ao, new_cache = attn_dec(pl["attn"], h, cache, pos, bspec)
+            x = x + ao
+        else:
+            so, new_cache = ssm_lib.ssm_apply_decode(pl["ssm"], h, cache, cfg)
+            x = x + so
+        if has_mlp:
+            h2 = rms_norm(x, pl["ln2"], eps)
+            if is_moe:
+                f, _ = moe_lib.moe_ffn(h2[:, None], pl["ffn"], cfg, rules, mesh)
+                f = f[:, 0]
+            else:
+                f = mlp_apply(h2, pl["ffn"], cfg.act)
+            x = x + f
+        return x, new_cache
+
+    # ---------------- stacks ----------------
+    def run_seq(params, x, bspec, emit_cache: bool):
+        def body(carry, pl):
+            x, aux = carry
+            x, cache, a = seq_block(pl, x, bspec, emit_cache)
+            return (x, aux + a), (cache if emit_cache else 0)
+
+        (x, aux), caches = _scan_layers(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"], cfg.remat)
+        return x, aux, (caches if emit_cache else None)
+
+    def run_dec(params, x, caches, pos, bspec):
+        def body(x, inputs):
+            pl, cache = inputs
+            x, new_cache = dec_block(pl, x, cache, pos, bspec)
+            return x, new_cache
+
+        return jax.lax.scan(body, x, (params["layers"], caches))
+
+    # ---------------- embedding helpers ----------------
+    def _embed_in(params, batch):
+        tokens = batch["tokens"]
+        bspec = rules.dp_if(tokens.shape[0])
+        x = embed_tokens(params["embed"], tokens, cdt)
+        n_front = 0
+        if is_vlm:
+            front = batch["patches"].astype(cdt)
+            x = jnp.concatenate([front, x], axis=1)
+            n_front = front.shape[1]
+        x = wsc(x, bspec, sp, None)
+        return x, bspec, n_front
+
+    # ---------------- public entry points ----------------
+    def loss(params, batch):
+        x, bspec, n_front = _embed_in(params, batch)
+        x, aux, _ = run_seq(params, x, bspec, emit_cache=False)
+        if n_front:
+            x = x[:, n_front:]
+        logits = unembed(params["embed"], x, eps)
+        logits = wsc(logits, bspec, sp,
+                     None if sp else rules.tp_if(cfg.vocab_padded))
+        labels = batch["labels"]
+        ce = token_xent(logits, labels, mask=labels >= 0)
+        total = ce + AUX_LOSS_WEIGHT * aux
+        return total, {"loss": ce, "aux_loss": aux}
+
+    def prefill(params, batch):
+        x, bspec, n_front = _embed_in(params, batch)
+        x, _, caches = run_seq(params, x, bspec, emit_cache=True)
+        logits = unembed(params["embed"], x[:, -1], eps)
+        return logits, caches
+
+    def decode(params, caches, tokens, pos):
+        bspec = rules.dp_if(tokens.shape[0])
+        x = embed_tokens(params["embed"], tokens[:, 0], cdt)
+        x = wsc(x, bspec, None)
+        x, new_caches = run_dec(params, x, caches, pos, bspec)
+        logits = unembed(params["embed"], x, eps)
+        return logits, new_caches
+
+    # ---------------- cache plumbing ----------------
+    def cache_shapes(batch: int, seq: int):
+        L = cfg.n_layers
+        out = {}
+        if has_attn:
+            s = min(seq, window) if window else seq
+            out["k"] = jax.ShapeDtypeStruct((L, batch, s, KH, D), cdt)
+            out["v"] = jax.ShapeDtypeStruct((L, batch, s, KH, D), cdt)
+            if window:
+                out["slot_pos"] = jax.ShapeDtypeStruct((L, window), jnp.int32)
+        if has_ssm:
+            sc = ssm_lib.ssm_cache_shape(cfg, batch, cdt)
+            out.update({k: jax.ShapeDtypeStruct((L,) + v.shape, v.dtype)
+                        for k, v in sc.items()})
+        return out
+
+    def cache_specs(batch: int):
+        out = {}
+        bspec = rules.dp_if(batch)
+        if has_attn:
+            out["k"] = P(None, bspec, rules.kv_seq, None, None)
+            out["v"] = P(None, bspec, rules.kv_seq, None, None)
+            if window:
+                out["slot_pos"] = P(None, None)
+        if has_ssm:
+            sc = ssm_lib.ssm_cache_specs(cfg, rules, bspec)
+            out.update({k: P(*((None,) + tuple(v))) for k, v in sc.items()})
+        return out
+
+    def make_cache(batch: int, seq: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            cache_shapes(batch, seq))
+
+    return Model(cfg=cfg, rules=rules, mesh=mesh, decls=decls, init=init,
+                 param_specs=specs, param_shapes=shapes, loss=loss,
+                 prefill=prefill, decode=decode, cache_shapes=cache_shapes,
+                 cache_specs=cache_specs, make_cache=make_cache)

@@ -1,0 +1,201 @@
+"""Sharding-aware optimizers: AdamW and a memory-lean variant for the
+trillion-parameter configs ("adafactor_m": bf16 first moment + factored
+second moment), per DESIGN.md §4. Self-contained (no optax in the image).
+
+``state_specs`` mirrors the parameter PartitionSpecs so optimizer state is
+sharded exactly like the parameters it tracks (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # adamw moments dtype
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (params, state)
+    state_specs: Callable[[Any], Any]
+    state_shapes: Callable[[Any], Any]
+
+
+def _schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _clip(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+
+def adamw(cfg: OptConfig = OptConfig()) -> Optimizer:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = _clip(grads, cfg.grad_clip)
+        lr = _schedule(cfg, step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(p, g, m, v):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+            u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                    m_new.astype(mdt), v_new.astype(mdt))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}, gnorm
+
+    def state_specs(param_specs):
+        return {"m": param_specs, "v": param_specs}
+
+    def state_shapes(param_shapes):
+        s = lambda p: jax.ShapeDtypeStruct(p.shape, mdt)
+        return {"m": jax.tree.map(s, param_shapes),
+                "v": jax.tree.map(s, param_shapes)}
+
+    return Optimizer("adamw", init, update, state_specs, state_shapes)
+
+
+# --------------------------------------------------------------------------
+# adafactor_m: bf16 momentum + factored second moment (giant configs)
+# --------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_m(cfg: OptConfig = OptConfig()) -> Optimizer:
+    def init(params):
+        def vrow(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        def vcol(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                                  params),
+                "vr": jax.tree.map(vrow, params),
+                "vc": jax.tree.map(vcol, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = _clip(grads, cfg.grad_clip)
+        lr = _schedule(cfg, step)
+        t = (step + 1).astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(p, g, m, vr, vc):
+            g2 = jnp.square(g) + 1e-30
+            if _factored(p.shape):
+                vr_new = cfg.b2 * vr + (1 - cfg.b2) * g2.mean(axis=-1)
+                vc_new = cfg.b2 * vc + (1 - cfg.b2) * g2.mean(axis=-2)
+                r = vr_new / jnp.maximum(
+                    vr_new.mean(axis=-1, keepdims=True), 1e-30)
+                v_hat = r[..., None] * vc_new[..., None, :]
+            else:
+                vr_new = cfg.b2 * vr + (1 - cfg.b2) * g2
+                vc_new = vc
+                v_hat = vr_new
+            u = g / (jnp.sqrt(v_hat / bc2) + cfg.eps)
+            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u
+            upd_ = m_new + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * upd_).astype(p.dtype),
+                    m_new.astype(jnp.bfloat16), vr_new, vc_new)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["vr"],
+                           state["vc"])
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "vr": pick(2), "vc": pick(3)}, gnorm
+
+    def state_specs(param_specs):
+        def vr_spec(s):
+            t = tuple(s)
+            return P(*t[:-1]) if len(t) >= 2 else P(*t)
+
+        def vc_spec(s):
+            t = tuple(s)
+            return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P(None)
+
+        return {"m": param_specs,
+                "vr": jax.tree.map(vr_spec, param_specs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                "vc": jax.tree.map(vc_spec, param_specs,
+                                   is_leaf=lambda x: isinstance(x, P))}
+
+    def state_shapes(param_shapes):
+        def vr(p):
+            return jax.ShapeDtypeStruct(
+                p.shape[:-1] if _factored(p.shape) else p.shape, jnp.float32)
+
+        def vc(p):
+            return jax.ShapeDtypeStruct(
+                p.shape[:-2] + p.shape[-1:] if _factored(p.shape) else (1,),
+                jnp.float32)
+
+        return {"m": jax.tree.map(
+                    lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16),
+                    param_shapes),
+                "vr": jax.tree.map(vr, param_shapes),
+                "vc": jax.tree.map(vc, param_shapes)}
+
+    return Optimizer("adafactor_m", init, update, state_specs, state_shapes)
+
+
+def get_optimizer(name: str, cfg: OptConfig = OptConfig()) -> Optimizer:
+    if name == "adamw":
+        return adamw(cfg)
+    if name == "adafactor_m":
+        return adafactor_m(cfg)
+    raise KeyError(name)

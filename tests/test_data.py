@@ -1,0 +1,75 @@
+"""Data pipeline tests: determinism, host sharding, learnable structure."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.pipeline import (DataConfig, SyntheticLM, TokenFileDataset,
+                                 write_token_file)
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=256, seq_len=32, global_batch=8, seed=3)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_per_step():
+    ds1, ds2 = SyntheticLM(_cfg()), SyntheticLM(_cfg())
+    for step in (0, 1, 17, 1000):
+        b1, b2 = ds1.batch_at(step), ds2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different steps -> different data
+    assert not np.array_equal(ds1.batch_at(0)["tokens"],
+                              ds1.batch_at(1)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    b = SyntheticLM(_cfg()).batch_at(5)
+    # label[t] is the next token after tokens[t]: check via re-generation of
+    # the same rows at seq_len+... simpler: label[:-1] == tokens[1:]
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_host_sharding_partitions_global_batch():
+    full = SyntheticLM(_cfg(n_hosts=1, host_id=0)).batch_at(7)["tokens"]
+    parts = [SyntheticLM(_cfg(n_hosts=4, host_id=h)).batch_at(7)["tokens"]
+             for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_tokens_in_vocab_range():
+    b = SyntheticLM(_cfg(vocab_size=100)).batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+def test_structure_is_learnable():
+    """The order-1 pattern must make next-token frequencies non-uniform
+    (otherwise the training-loss assertions downstream are meaningless)."""
+    ds = SyntheticLM(_cfg(structure=0.9, vocab_size=64,
+                          global_batch=64, seq_len=64))
+    b = ds.batch_at(0)
+    # count matches of the grammar successor
+    succ = ds._succ
+    hit = (b["labels"] == succ[b["tokens"]]).mean()
+    assert hit > 0.7, hit  # ~= structure fraction
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000), hosts=st.sampled_from([1, 2, 4, 8]))
+def test_sharding_property(step, hosts):
+    full = SyntheticLM(_cfg(n_hosts=1)).batch_at(step)["tokens"]
+    parts = [SyntheticLM(_cfg(n_hosts=hosts, host_id=h)).batch_at(step)
+             ["tokens"] for h in range(hosts)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_token_file_dataset(tmp_path):
+    path = str(tmp_path / "tokens.bin")
+    rng = np.random.RandomState(0)
+    write_token_file(path, rng.randint(0, 1000, size=(10_000,)))
+    ds = TokenFileDataset(path, _cfg(vocab_size=1000))
+    b1, b2 = ds.batch_at(3), ds.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert b1["tokens"].shape == (8, 32)

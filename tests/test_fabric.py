@@ -1,0 +1,238 @@
+"""Fabric layer tests: topology invariants, routing policies, CC behaviors,
+and the paper's validation targets expressed as assertions (DESIGN.md §1.5).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bench, congestion as cong
+from repro.core.fabric import cc as cc_lib
+from repro.core.fabric import routing, systems, topology
+
+
+# --------------------------------------------------------------------------
+# topology invariants
+# --------------------------------------------------------------------------
+
+TOPOS = {
+    "single_switch": lambda: topology.single_switch(8),
+    "leaf_spine": lambda: topology.leaf_spine(8),
+    "fat_tree": lambda: topology.fat_tree(64),
+    "dragonfly": lambda: topology.dragonfly(128),
+    "dragonfly_plus": lambda: topology.dragonfly_plus(128),
+    "torus2d": lambda: topology.torus2d(4, 4),
+}
+
+
+def _check_path(topo, src, dst, path):
+    """A path must start at src's injection link, end at dst's ejection link,
+    and be link-contiguous (each link's head == next link's tail)."""
+    assert len(path) >= 1
+    names = topo.link_names
+    a0 = names[path[0]][0]
+    assert a0 == ("h", src), (a0, src)
+    b_last = names[path[-1]][1]
+    assert b_last == ("h", dst), (b_last, dst)
+    for l1, l2 in zip(path, path[1:]):
+        assert names[l1][1] == names[l2][0], (names[l1], names[l2])
+
+
+@pytest.mark.parametrize("name", sorted(TOPOS))
+def test_topology_paths_valid(name):
+    topo = TOPOS[name]()
+    rng = np.random.RandomState(0)
+    for _ in range(40):
+        src, dst = rng.randint(0, topo.n_nodes, 2)
+        if src == dst:
+            continue
+        paths = topo.paths(src, dst)
+        assert len(paths) >= 1
+        for p in paths:
+            _check_path(topo, src, dst, p)
+        # candidate paths must be distinct
+        assert len({tuple(p) for p in paths}) == len(paths)
+
+
+def test_fat_tree_taper():
+    topo = topology.fat_tree(64, nodes_per_leaf=16, taper=1.67)
+    # 1.67:1 blocking -> fewer spine uplinks than hosts per leaf
+    assert topo.meta["n_spine"] == round(16 / 1.67)
+    # cross-leaf pairs have exactly one path per spine
+    assert len(topo.paths(0, 63)) == topo.meta["n_spine"]
+
+
+def test_torus_dor_hop_count():
+    topo = topology.torus2d(4, 4)
+    # DOR minimal routing: hops = manhattan distance on the torus (+2 if you
+    # count both unit moves; links here ARE the hops)
+    p = topo.paths(0, 5)[0]  # (0,0) -> (1,1): 2 hops
+    assert len(p) == 2
+    p = topo.paths(0, 15)[0]  # (0,0) -> (3,3): wrap = 1+1 hops
+    assert len(p) == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(src=st.integers(0, 127), dst=st.integers(0, 127))
+def test_dragonfly_paths_property(src, dst):
+    topo = _DF_CACHE[0]
+    if src == dst:
+        return
+    for p in topo.paths(src, dst):
+        _check_path(topo, src, dst, p)
+
+
+_DF_CACHE = [topology.dragonfly(128)]
+
+
+# --------------------------------------------------------------------------
+# static routing policies
+# --------------------------------------------------------------------------
+
+def _uplink_flows(n=8):
+    topo = topology.leaf_spine(n)
+    # concurrent flows from the same source leaf to the other leaf
+    src_dst = [(0, 4), (1, 5), (2, 6), (3, 7)]
+    paths = [topo.paths(s, d) for s, d in src_dst]
+    return topo, src_dst, paths
+
+
+def test_nslb_collision_free():
+    """NSLB must place concurrent flows on distinct uplinks when possible
+    (the paper's flow-matrix collision-free property, ref [22])."""
+    topo, src_dst, paths = _uplink_flows()
+    choice = routing.assign_paths("nslb", src_dst, paths, len(topo.caps))
+    used = [tuple(paths[f][choice[f]][1:3]) for f in range(len(src_dst))]
+    assert len(set(used)) == len(used), used
+
+
+def test_deterministic_routing_collides():
+    topo, src_dst, paths = _uplink_flows()
+    choice = routing.assign_paths("deterministic", src_dst, paths,
+                                  len(topo.caps))
+    used = [tuple(paths[f][choice[f]][1:3]) for f in range(len(src_dst))]
+    assert len(set(used)) == 1  # everyone picks candidate 0
+
+
+def test_ecmp_is_deterministic_per_seed():
+    topo, src_dst, paths = _uplink_flows()
+    c1 = routing.assign_paths("ecmp", src_dst, paths, len(topo.caps), seed=3)
+    c2 = routing.assign_paths("ecmp", src_dst, paths, len(topo.caps), seed=3)
+    assert (c1 == c2).all()
+
+
+# --------------------------------------------------------------------------
+# congestion profiles + flow construction
+# --------------------------------------------------------------------------
+
+def test_interleaved_split():
+    v, a = cong.interleaved_split(8)
+    assert list(v) == [0, 2, 4, 6] and list(a) == [1, 3, 5, 7]
+
+
+@settings(max_examples=30, deadline=None)
+@given(burst=st.floats(1e-4, 1e-2), pause=st.floats(1e-4, 1e-2),
+       t0=st.floats(0, 1.0))
+def test_bursty_duty_cycle(burst, pause, t0):
+    """The envelope's on-fraction must approach burst/(burst+pause)."""
+    prof = cong.bursty(burst, pause)
+    dt = (burst + pause) / 500.0
+    env = prof.envelope(t0, 50_000, dt)
+    duty = env.mean()
+    want = burst / (burst + pause)
+    assert abs(duty - want) < 0.02, (duty, want)
+
+
+def test_collective_flow_bytes():
+    """Per-iteration wire bytes must match the analytic schedule models."""
+    v = 1 << 20
+    n = 8
+    nodes = list(range(n))
+    ag = cong.collective_flows(nodes, "ring_allgather", v)
+    assert len(ag) == n
+    assert np.isclose(sum(b for *_, b in ag), n * v * (n - 1) / n)
+    a2a = cong.collective_flows(nodes, "alltoall", v)
+    assert len(a2a) == n * (n - 1)
+    inc = cong.collective_flows(nodes, "incast", v)
+    assert len(inc) == n - 1 and all(d == nodes[0] for _, d, _ in inc)
+
+
+# --------------------------------------------------------------------------
+# simulator: conservation + paper validation targets
+# --------------------------------------------------------------------------
+
+def test_goodput_bounded_by_capacity():
+    """Victim goodput can never exceed aggregate injection capacity."""
+    sysp = systems.get_system("nanjing_nslb")
+    res = bench.goodput_trace(sysp, 8, "alltoall", 8 * 2 ** 20, n_iters=20)
+    cap = 8 * 200e9 / 8.0  # 8 nodes x 200 Gb/s in B/s
+    assert res.victim_rate_trace.max() <= cap * 1.01
+
+
+def test_fig4_nslb_protects_victims():
+    """Paper Fig. 4: NSLB on -> no drop under congestion; off -> ~2/3."""
+    v = 16 * 2 ** 20
+    on = bench.run_point(systems.get_system("nanjing_nslb"), 8, "alltoall",
+                         "alltoall", v, cong.steady(), n_iters=30, warmup=5)
+    off = bench.run_point(systems.get_system("nanjing_ecmp"), 8, "alltoall",
+                          "alltoall", v, cong.steady(), n_iters=30, warmup=5)
+    assert on.ratio > 0.92, on
+    assert off.ratio < 0.80, off
+
+
+def test_obs1_ce8850_sawtooth():
+    """Paper Obs. 1 / Fig. 3: CE8850 self-congests on large AllGather
+    (sawtooth = high goodput variability); CE9855(+AI-ECN) stays stable;
+    EDR InfiniBand on the same nodes stays stable."""
+    v = 128 * 2 ** 20
+
+    def cv(sys_name, n=4):
+        res = bench.goodput_trace(systems.get_system(sys_name), n,
+                                  "ring_allgather", v, n_iters=25)
+        tr = res.victim_rate_trace
+        tr = tr[len(tr) // 3:]
+        tr = tr[tr > 0]
+        return tr.std() / tr.mean()
+
+    cv_ce8850 = cv("haicgu_ce8850")
+    cv_ib = cv("haicgu_ib")
+    cv_ce9855 = cv("nanjing_nslb")
+    assert cv_ce8850 > 2.5 * cv_ib, (cv_ce8850, cv_ib)
+    assert cv_ce8850 > 2.5 * cv_ce9855, (cv_ce8850, cv_ce9855)
+
+
+@pytest.mark.slow
+def test_fig5_steady_large_scale_ordering():
+    """Paper Fig. 5 / Obs. 2 at 64 nodes (scaled): LUMI ~unaffected under
+    both aggressors; Leonardo collapses under Incast but not AlltoAll;
+    CRESCO8 degrades under AlltoAll."""
+    v = 2 * 2 ** 20
+    n = 64
+
+    def ratio(sys_name, aggr):
+        return bench.run_point(systems.get_system(sys_name), n,
+                               "ring_allgather", aggr, v, cong.steady(),
+                               n_iters=25, warmup=5).ratio
+
+    lumi_a2a = ratio("lumi", "alltoall")
+    lumi_inc = ratio("lumi", "incast")
+    leo_a2a = ratio("leonardo", "alltoall")
+    leo_inc = ratio("leonardo", "incast")
+    cre_a2a = ratio("cresco8", "alltoall")
+    assert lumi_a2a > 0.90 and lumi_inc > 0.90, (lumi_a2a, lumi_inc)
+    assert leo_a2a > 0.75, leo_a2a
+    assert leo_inc < 0.55, leo_inc           # incast collapse (paper: ~0.2)
+    assert cre_a2a < 0.85, cre_a2a           # blocking fat-tree degradation
+    assert leo_inc < lumi_inc and cre_a2a < lumi_a2a
+
+
+def test_bursty_short_gap_worse_than_long_gap():
+    """Paper Obs. 3: short inter-burst gaps leave no drain time and hurt
+    more than long gaps (same burst length)."""
+    v = 2 * 2 ** 20
+    sysp = systems.get_system("leonardo")
+    short = bench.run_point(sysp, 32, "ring_allgather", "incast", v,
+                            cong.bursty(2e-3, 0.2e-3), n_iters=25, warmup=5)
+    long_ = bench.run_point(sysp, 32, "ring_allgather", "incast", v,
+                            cong.bursty(2e-3, 8e-3), n_iters=25, warmup=5)
+    assert long_.ratio > short.ratio + 0.05, (short.ratio, long_.ratio)

@@ -1,0 +1,110 @@
+"""hlo_stats parser tests: FLOPs/byte counting on real lowered modules,
+while-loop trip-count multipliers, collective wire-byte attribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_stats import analyze, wire_bytes
+
+
+def _lower_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_counted():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    text = _lower_text(lambda x, y: x @ y, a, b)
+    stats = analyze(text, 1)
+    want = 2 * 128 * 256 * 64
+    assert abs(stats["flops"] - want) / want < 0.01, stats["flops"]
+
+
+def test_scan_multiplies_flops():
+    """A matmul inside lax.scan must count trip_count times."""
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+    trips = 12
+
+    def fn(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    stats = analyze(_lower_text(fn, x, w), 1)
+    want = 2 * 8 * 64 * 64 * trips
+    # XLA may hoist/fuse a bit; require within 2x but at least trips/2 visits
+    assert stats["flops"] >= want * 0.5, (stats["flops"], want)
+    assert stats["flops"] <= want * 2.0, (stats["flops"], want)
+
+
+def test_memory_bytes_scale_with_tensor_size():
+    x = jnp.zeros((1024, 1024), jnp.float32)
+    y = jnp.zeros((32, 32), jnp.float32)
+    big = analyze(_lower_text(lambda a: a * 2 + 1, x), 1)
+    small = analyze(_lower_text(lambda a: a * 2 + 1, y), 1)
+    assert big["hbm_bytes"] > 100 * small["hbm_bytes"]
+    # elementwise op reads + writes ~2x4MiB
+    assert 0.5 * 8e6 < big["hbm_bytes"] < 4 * 8e6
+
+
+def test_wire_bytes_formulas():
+    # ring algorithms on g ranks
+    assert wire_bytes("all-gather", 256, 1024, 4) == 0.75 * 1024
+    assert wire_bytes("reduce-scatter", 1024, 256, 4) == 0.75 * 1024
+    assert wire_bytes("all-reduce", 1024, 1024, 4) == 2 * 0.75 * 1024
+    assert wire_bytes("all-to-all", 1024, 1024, 4) == 0.75 * 1024
+    assert wire_bytes("collective-permute", 512, 512, 4) == 512
+    assert wire_bytes("all-reduce", 1024, 1024, 1) == 0.0
+
+
+def test_collectives_detected_in_sharded_module():
+    """Lower a psum under shard_map on a 1-device mesh — the collective op
+    must appear in the parse (group size 1 -> zero wire bytes)."""
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.sharding import PartitionSpec as P
+
+    def fn(x):
+        return jax.shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                             in_specs=P("x"), out_specs=P())(x)
+
+    text = _lower_text(fn, jnp.zeros((8, 16), jnp.float32))
+    stats = analyze(text, 1)
+    assert stats["collectives"]["total"]["count"] >= 1
+    assert stats["collectives"]["total"]["wire_bytes"] == 0.0
+
+
+def test_dryrun_artifacts_complete_and_consistent():
+    """Every (arch x shape x mesh) artifact exists; ok cells carry roofline
+    terms; skip cells are exactly the documented long_500k skips."""
+    import json
+    import os
+
+    from repro.configs import all_arch_names, get_config
+    from repro.configs.base import SHAPES
+
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    n_ok = n_skip = 0
+    for arch in all_arch_names():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                path = os.path.join(art, f"{arch}__{shape}__{mesh}.json")
+                assert os.path.exists(path), path
+                with open(path) as f:
+                    cell = json.load(f)
+                applicable = shape in [s.name for s in cfg.shapes()]
+                if applicable:
+                    assert cell["status"] == "ok", (arch, shape, mesh)
+                    assert cell["n_devices"] == (512 if mesh == "multi"
+                                                 else 256)
+                    r = cell["roofline"]
+                    assert r["compute_s"] > 0 and r["memory_s"] > 0
+                    assert r["bottleneck"] in ("compute_s", "memory_s",
+                                               "collective_s")
+                    n_ok += 1
+                else:
+                    assert cell["status"] == "skip", (arch, shape, mesh)
+                    n_skip += 1
+    assert n_ok == 64 and n_skip == 16  # 32 cells x 2 meshes; 8 skips x 2

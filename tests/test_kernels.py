@@ -1,0 +1,191 @@
+"""Per-kernel allclose tests: sweep shapes/dtypes in interpret=True mode and
+assert against the pure-jnp oracles in kernels/ref.py (brief deliverable (c)).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    x = jax.random.normal(rng, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+FA_SHAPES = [
+    # (B, Sq, Skv, H, KH, D)
+    (1, 128, 128, 4, 4, 32),     # MHA square
+    (2, 64, 64, 8, 2, 16),       # GQA 4:1
+    (1, 96, 96, 4, 1, 64),       # MQA, non-multiple of block
+    (1, 256, 256, 2, 2, 128),    # multi kv-block
+]
+
+
+@pytest.mark.parametrize("shape", FA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(shape, dtype, causal):
+    B, Sq, Skv, H, KH, D = shape
+    rng = jax.random.PRNGKey(hash(shape) & 0xFFFF)
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = _rand(kq, (B, Sq, H, D), dtype)
+    k = _rand(kk, (B, Skv, KH, D), dtype)
+    v = _rand(kv, (B, Skv, KH, D), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_flash_attention_matches_xla_path():
+    """The Pallas kernel and the XLA-native flash path used by the models
+    implement the same algorithm; they must agree."""
+    from repro.models.layers import flash_attention_xla
+
+    rng = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(rng, 3)
+    q = _rand(kq, (2, 64, 4, 32), jnp.float32)
+    k = _rand(kk, (2, 64, 2, 32), jnp.float32)
+    v = _rand(kv, (2, 64, 2, 32), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True, block_q=32, block_kv=32)
+    b = flash_attention_xla(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# selective scan
+# --------------------------------------------------------------------------
+
+SSM_SHAPES = [
+    (1, 8, 64, 8),    # (B, T, Di, N)
+    (2, 16, 128, 16),
+    (1, 32, 96, 4),   # Di not a block multiple
+]
+
+
+@pytest.mark.parametrize("shape", SSM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan(shape, dtype):
+    B, T, Di, N = shape
+    rng = jax.random.PRNGKey(hash(shape) & 0xFFFF)
+    ka, kb, kh = jax.random.split(rng, 3)
+    # decay coefficients in (0, 1) like exp(dt*A)
+    dA = jax.nn.sigmoid(jax.random.normal(ka, (B, T, Di, N))).astype(dtype)
+    dBx = _rand(kb, (B, T, Di, N), dtype)
+    h0 = _rand(kh, (B, Di, N), jnp.float32)
+    hs, hT = ops.ssm_scan(dA, dBx, h0, block_d=64)
+    hs_r, hT_r = ref.ssm_scan(dA, dBx, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_r), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_r), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(1, 8, 64, 8), (2, 12, 96, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_selective_scan(shape, dtype):
+    """The fused kernel (dA on the fly + in-kernel C contraction — the
+    §Perf F-series deploy path) must match the composed oracle."""
+    B, T, Di, N = shape
+    rng = jax.random.PRNGKey(hash(shape) & 0xFFF)
+    kd, ka, kb, kc, kx, kh = jax.random.split(rng, 6)
+    dt = jax.nn.softplus(jax.random.normal(kd, (B, T, Di))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ka, (Di, N))).astype(jnp.float32)
+    Bc = _rand(kb, (B, T, N), dtype)
+    Cc = _rand(kc, (B, T, N), dtype)
+    x = _rand(kx, (B, T, Di), dtype)
+    h0 = _rand(kh, (B, Di, N), jnp.float32)
+    y, hT = ops.fused_selective_scan(dt, A, Bc, Cc, x, h0, block_d=32)
+    y_r, hT_r = ref.fused_selective_scan(dt, A, Bc, Cc, x, h0)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else _tol(dtype)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), **tol)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_r), **tol)
+
+
+# --------------------------------------------------------------------------
+# int8 quant / dequant
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,block", [((4, 512), 256), ((1, 256), 256),
+                                         ((8, 1024), 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_roundtrip(shape, block, dtype):
+    rng = jax.random.PRNGKey(11)
+    x = (_rand(rng, shape, dtype).astype(jnp.float32) * 3.0)
+    q, s = ops.quantize_int8(x, block=block)
+    q_r, s_r = ref.quantize_int8(x, block=block)
+    # codes may differ by 1 on exact .5 rounding ties (fp associativity)
+    dq = np.abs(np.asarray(q, np.int32) - np.asarray(q_r, np.int32))
+    assert dq.max() <= 1 and (dq > 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=1e-6)
+    back = ops.dequantize_int8(q, s, block=block)
+    back_r = ref.dequantize_int8(q_r, s_r, block=block)
+    # where codes agree dequant is exact; tie rows differ by <= one step
+    step = float(np.asarray(s).max())
+    np.testing.assert_allclose(np.asarray(back), np.asarray(back_r),
+                               rtol=0, atol=step + 1e-6)
+    # quantization error bounded by scale/2 per element
+    err = np.abs(np.asarray(back) - np.asarray(x, np.float32))
+    bound = np.repeat(np.asarray(s), shape[1] // s.shape[1], axis=1) * 0.5
+    assert (err <= bound + 1e-6).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 6), nb=st.integers(1, 4),
+       scale_exp=st.integers(-3, 3), seed=st.integers(0, 2 ** 16))
+def test_quant_roundtrip_property(rows, nb, scale_exp, seed):
+    """Property: |x - dq(q(x))| <= scale/2, any magnitude, any shape."""
+    block = 128
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(rows, nb * block) * 10.0 ** scale_exp,
+                    jnp.float32)
+    q, s = ref.quantize_int8(x, block=block)
+    back = ref.dequantize_int8(q, s, block=block)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.repeat(np.asarray(s), block, axis=1) * 0.5 + 1e-9
+    assert (err <= bound).all()
+    assert np.asarray(q).min() >= -127 and np.asarray(q).max() <= 127
+
+
+# --------------------------------------------------------------------------
+# fused ring-reduce accumulate
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128, 512), (64, 384), (300, 640)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("scale", [1.0, 0.25])
+def test_fused_accumulate(shape, dtype, scale):
+    rng = jax.random.PRNGKey(5)
+    k1, k2 = jax.random.split(rng)
+    acc = _rand(k1, shape, dtype)
+    x = _rand(k2, shape, dtype)
+    got = ops.fused_accumulate(acc, x, scale=scale)
+    want = ref.fused_accumulate(acc, x, scale=scale)
+    assert got.dtype == acc.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_fused_accumulate_fp32_accumulation():
+    """bf16 inputs must accumulate in fp32 (the kernel's whole point)."""
+    acc = jnp.full((8, 128), 256.0, jnp.bfloat16)
+    x = jnp.full((8, 128), 1.0, jnp.bfloat16)  # 256+1 not representable in bf16
+    out = ops.fused_accumulate(acc, x, scale=1.0)
+    # fp32 accumulate then round-to-nearest-bf16 gives 258 (256 rounds down)
+    want = ref.fused_accumulate(acc, x, scale=1.0)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(want, np.float32))

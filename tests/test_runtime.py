@@ -1,0 +1,165 @@
+"""Runtime integration tests: end-to-end training loop with checkpoint
+restart, failure recovery, straggler detection, microbatching equivalence,
+and the batched server."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh, rules_for
+from repro.models.api import build_model
+from repro.optim.adamw import OptConfig
+from repro.runtime import fault
+from repro.runtime.serve import BatchedServer
+from repro.runtime.train_loop import (TrainConfig, Trainer,
+                                      make_microbatched_train_step)
+
+
+def _arch(name="yi-6b"):
+    return dataclasses.replace(get_config(name).reduced(),
+                               capacity_factor=8.0)
+
+
+def _tc(**kw):
+    base = dict(total_steps=20, ckpt_every=5, log_every=100,
+                opt=OptConfig(lr=2e-3, warmup_steps=2, decay_steps=1000))
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_train_loss_decreases():
+    t = Trainer(_arch(), _tc(total_steps=30))
+    out = t.run()
+    assert out["steps_run"] == 30
+    assert out["final_loss"] < out["first_loss"] - 0.3, out
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    root = str(tmp_path / "ckpt")
+    t1 = Trainer(_arch(), _tc(total_steps=10, ckpt_dir=root, ckpt_every=5))
+    out1 = t1.run()
+    # a fresh trainer resumes from step 10 and runs only the remainder
+    t2 = Trainer(_arch(), _tc(total_steps=15, ckpt_dir=root, ckpt_every=5))
+    out2 = t2.run()
+    assert out2["steps_run"] == 5
+    assert out2["log"][0]["step"] == 10
+    # loss continuity: the resumed loss is near where the first run ended
+    assert abs(out2["first_loss"] - out1["final_loss"]) < 0.5
+
+
+def test_failure_recovery(tmp_path):
+    root = str(tmp_path / "ckpt")
+    inj = fault.FailureInjector(fail_at=(7, 13))
+    t = Trainer(_arch(), _tc(total_steps=20, ckpt_dir=root, ckpt_every=5),
+                failure_injector=inj)
+    out = t.run()
+    assert inj.failures == 2
+    assert out["restarts"] == 2
+    # every step up to total ran (some twice, replayed from checkpoints)
+    assert out["log"][-1]["step"] == 19
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_microbatching_matches_full_batch():
+    """grad-accumulation over 4 microbatches == one full-batch step."""
+    cfg = _arch("phi3-mini-3.8b")
+    mesh = make_host_mesh()
+    rules = rules_for(cfg, mesh)
+    model = build_model(cfg, rules, mesh)
+    from repro.launch.steps import init_train_state
+    from repro.optim.adamw import get_optimizer
+
+    opt = get_optimizer("adamw", OptConfig(lr=1e-3, warmup_steps=1))
+    rng = jax.random.PRNGKey(0)
+    state = init_train_state(model, opt, rng)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                global_batch=8, seed=1))
+    batch = jax.tree.map(jnp.asarray, ds.batch_at(0))
+    with jax.set_mesh(mesh):
+        s1 = jax.jit(make_microbatched_train_step(model, opt, 1))
+        s4 = jax.jit(make_microbatched_train_step(model, opt, 4))
+        out1, m1 = s1(jax.tree.map(jnp.copy, state), batch)
+        out4, m4 = s4(jax.tree.map(jnp.copy, state), batch)
+    assert abs(float(m1["total_loss"]) - float(m4["total_loss"])) < 1e-4
+    diff = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        out1["params"], out4["params"])
+    assert max(jax.tree.leaves(diff)) < 5e-3
+
+
+def test_straggler_monitor():
+    times = iter([0.0, 1.0,    # step 0: 1s
+                  1.0, 2.0,    # step 1: 1s
+                  2.0, 12.0,   # step 2: 10s <- straggler
+                  12.0, 22.0,  # step 3: 10s
+                  22.0, 32.0])  # step 4: 10s -> trips
+    mon = fault.StepMonitor(threshold=3.0, trip_after=3,
+                            clock=lambda: next(times))
+    flags = []
+    for s in range(5):
+        mon.start_step()
+        flags.append(mon.end_step(s).flagged)
+    assert flags == [False, False, True, True, True]
+    assert mon.tripped
+
+
+def test_elastic_plan():
+    assert fault.elastic_plan(512, 16) == (32, 16)
+    assert fault.elastic_plan(500, 16) == (31, 16)
+    with pytest.raises(ValueError):
+        fault.elastic_plan(8, 16)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = _arch("yi-6b")
+    mesh = make_host_mesh()
+    rules = rules_for(cfg, mesh)
+    model = build_model(cfg, rules, mesh)
+    params = model.init(jax.random.PRNGKey(0))
+    return BatchedServer(model, params, max_batch=4, max_seq=64)
+
+
+def test_serve_greedy_deterministic(server):
+    p = np.arange(1, 9, dtype=np.int32)
+    server.submit(p, max_new_tokens=8)
+    server.submit(p, max_new_tokens=8)
+    server.run_until_drained()
+    a, b = server.done[-2], server.done[-1]
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert a.finish_reason == "length"
+    assert len(a.tokens) == 8
+
+
+def test_serve_batch_equals_solo(server):
+    """A request's greedy output must not depend on its batch companions
+    (same prompt length -> no padding interference)."""
+    p1 = np.arange(1, 9, dtype=np.int32)
+    p2 = np.arange(20, 28, dtype=np.int32)
+    server.submit(p1, max_new_tokens=6)
+    server.run_until_drained()
+    solo = server.done[-1].tokens.copy()
+    server.submit(p1, max_new_tokens=6)
+    server.submit(p2, max_new_tokens=6)
+    server.run_until_drained()
+    batched = next(r for r in server.done[-2:]
+                   if np.array_equal(r.prompt, p1)).tokens
+    np.testing.assert_array_equal(solo, batched)
+
+
+def test_serve_throughput_counters(server):
+    n0 = server.stats.requests_done
+    for _ in range(6):  # > max_batch forces multiple waves
+        server.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+    server.run_until_drained()
+    assert server.stats.requests_done == n0 + 6
+    assert server.stats.tokens_per_s > 0

@@ -1,0 +1,59 @@
+"""Simulator property tests: monotonicity, straggler gating, profile
+ordering — the invariants any congestion model must satisfy."""
+import numpy as np
+import pytest
+
+from repro.core import bench, congestion as cong
+from repro.core.fabric import systems
+
+
+def test_congestion_never_helps():
+    """ratio = t_uncongested / t_congested must be <= ~1 (within noise)."""
+    for sysn in ("leonardo", "lumi", "cresco8"):
+        r = bench.run_point(systems.get_system(sysn), 32, "ring_allgather",
+                            "alltoall", 2 << 20, cong.steady(),
+                            n_iters=20, warmup=4)
+        assert r.ratio <= 1.1, (sysn, r.ratio)
+
+
+def test_more_intense_duty_cycle_is_worse_or_equal():
+    """Monotone in the burst duty cycle (same period)."""
+    sysp = systems.get_system("leonardo")
+    ratios = []
+    for burst, pause in ((1e-3, 7e-3), (4e-3, 4e-3), (7e-3, 1e-3)):
+        r = bench.run_point(sysp, 32, "ring_allgather", "incast", 2 << 20,
+                            cong.bursty(burst, pause), n_iters=20, warmup=4)
+        ratios.append(r.ratio)
+    assert ratios[0] >= ratios[1] - 0.08
+    assert ratios[1] >= ratios[2] - 0.08
+    assert ratios[0] > ratios[2]  # light duty strictly better than heavy
+
+
+def test_steady_at_least_as_bad_as_any_burst():
+    sysp = systems.get_system("leonardo")
+    steady = bench.run_point(sysp, 32, "ring_allgather", "incast", 2 << 20,
+                             cong.steady(), n_iters=20, warmup=4).ratio
+    light = bench.run_point(sysp, 32, "ring_allgather", "incast", 2 << 20,
+                            cong.bursty(1e-3, 7e-3), n_iters=20,
+                            warmup=4).ratio
+    assert steady <= light + 0.05
+
+
+def test_straggler_gates_collective():
+    """A 10x-degraded NIC on one node must stretch a synchronous ring
+    collective by >3x (gated by the slowest member) — the signal that
+    makes elastic eviction pay (DESIGN.md §7)."""
+    out = bench.straggler_impact(systems.get_system("nanjing_nslb"), 8,
+                                 "ring_allgather", 8 << 20, slow_factor=0.1)
+    assert out["slowdown"] > 3.0, out
+    assert out["slowdown"] < 20.0, out  # and bounded by ~1/slow_factor
+
+
+def test_bigger_vectors_take_longer():
+    sysp = systems.get_system("lumi")
+    t = []
+    for v in (1 << 20, 8 << 20, 64 << 20):
+        r = bench.run_point(sysp, 16, "ring_allgather", "", v,
+                            cong.no_congestion(), n_iters=15, warmup=3)
+        t.append(r.t_uncongested_s)
+    assert t[0] < t[1] < t[2]
