@@ -25,8 +25,9 @@ import numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.core import collectives as C
+from repro.launch.mesh import compat_make_mesh
 
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat_make_mesh((8,), ("x",))
 n = 8
 out = []
 
@@ -88,7 +89,9 @@ def run_all(sizes) -> list:
 
 
 def main(force: bool = False):
-    sizes = [32 * 2 ** 10, 2 * 2 ** 20]
+    from repro.core import scenarios
+
+    sizes = list(scenarios.get("collective_microbench").microbench_sizes)
     cache_points = [(s,) for s in sizes]
 
     def run_size(size):

@@ -9,11 +9,8 @@ CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                          "bench_cache")
 
 
-def cached_sweep(name: str, keys: List[str], points: Iterable[tuple],
-                 fn: Callable[..., Dict], force: bool = False) -> List[Dict]:
-    """Run ``fn(*point) -> dict`` per point, caching rows to a CSV keyed by
-    the point tuple — re-running a partially completed sweep only computes
-    the missing cells."""
+def _load_cache(name: str, keys: List[str],
+                force: bool) -> "tuple[str, Dict[tuple, Dict]]":
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, f"{name}.csv")
     cache: Dict[tuple, Dict] = {}
@@ -21,6 +18,15 @@ def cached_sweep(name: str, keys: List[str], points: Iterable[tuple],
         with open(path) as f:
             for row in csv.DictReader(f):
                 cache[tuple(row[k] for k in keys)] = row
+    return path, cache
+
+
+def cached_sweep(name: str, keys: List[str], points: Iterable[tuple],
+                 fn: Callable[..., Dict], force: bool = False) -> List[Dict]:
+    """Run ``fn(*point) -> dict`` per point, caching rows to a CSV keyed by
+    the point tuple — re-running a partially completed sweep only computes
+    the missing cells."""
+    path, cache = _load_cache(name, keys, force)
     rows = []
     for point in points:
         key = tuple(str(p) for p in point)
@@ -32,6 +38,32 @@ def cached_sweep(name: str, keys: List[str], points: Iterable[tuple],
         rows.append(row)
         cache[key] = row
         _write(path, keys, cache)
+    return rows
+
+
+SCENARIO_KEYS = ["system", "n_nodes", "aggressor", "vector_bytes", "profile"]
+
+
+def scenario_rows(scenario, force: bool = False) -> List[Dict]:
+    """Run a registered scenario with grid-level CSV caching: a grid whose
+    cells are all cached is skipped; otherwise the whole grid re-runs in
+    one batched bench.run_grid call (that is the unit of compute now)."""
+    from repro.core import scenarios as scen
+
+    path, cache = _load_cache(scenario.name, SCENARIO_KEYS, force)
+    rows = []
+    for grid in scenario.grids:
+        expected = [(grid.system, str(grid.n_nodes),
+                     grid.aggressor or "none", str(float(v)), p.label())
+                    for v in grid.sizes for p in grid.profiles]
+        if all(k in cache for k in expected):
+            rows.extend(cache[k] for k in expected)
+            continue
+        for r in scen.run_grid_spec(scenario, grid):
+            row = {k: str(v) for k, v in scen.result_row(grid, r).items()}
+            cache[tuple(row[k] for k in SCENARIO_KEYS)] = row
+            rows.append(row)
+        _write(path, SCENARIO_KEYS, cache)
     return rows
 
 

@@ -1,37 +1,21 @@
 """Paper Fig. 5 / Obs. 2: steady congestion at scale — ratio heatmaps
-(nodes x vector size) per system x aggressor, AllGather victim."""
+(nodes x vector size) per system x aggressor, AllGather victim.
+
+Routed through the scenario registry: each (system, aggressor, nodes) grid
+runs as ONE batched bench.run_grid call over its vector sizes."""
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import cached_sweep, heatmap, size_label
-from repro.core import bench, congestion as cong
-from repro.core.fabric import systems
+from benchmarks.common import heatmap, scenario_rows, size_label
+from repro.core import scenarios
 
-SYSTEMS = ("cresco8", "leonardo", "lumi")
-AGGRESSORS = ("alltoall", "incast")
-NODES = (16, 32, 64, 128, 256)
-SIZES = (512, 32 * 2 ** 10, 2 * 2 ** 20, 16 * 2 ** 20)
-
-
-def run_point(system: str, aggr: str, n_nodes: int,
-              vector_bytes: float) -> dict:
-    r = bench.run_point(systems.get_system(system), int(n_nodes),
-                        "ring_allgather", aggr, float(vector_bytes),
-                        cong.steady(), n_iters=25, warmup=5)
-    return {"ratio": round(r.ratio, 4),
-            "t_uncongested_us": round(r.t_uncongested_s * 1e6, 1),
-            "t_congested_us": round(r.t_congested_s * 1e6, 1)}
+SYSTEMS = scenarios.FIG5_SYSTEMS
+AGGRESSORS = scenarios.FIG5_AGGRESSORS
 
 
 def main(force: bool = False, quick: bool = False):
-    nodes = (16, 64, 256) if quick else NODES
-    sizes = (32 * 2 ** 10, 2 * 2 ** 20) if quick else SIZES
-    points = [(s, a, n, v) for s in SYSTEMS for a in AGGRESSORS
-              for n in nodes for v in sizes]
-    rows = cached_sweep("fig5_steady",
-                        ["system", "aggressor", "n_nodes", "vector_bytes"],
-                        points, run_point, force=force)
+    rows = scenario_rows(scenarios.get("fig5_steady", quick), force=force)
     for s in SYSTEMS:
         for a in AGGRESSORS:
             sub = [r for r in rows

@@ -1,41 +1,24 @@
 """Paper Fig. 6 / Obs. 3: bursty congestion at 64 nodes — 3x3 heatmaps of
-(burst length x inter-burst pause) per system x aggressor x vector size."""
+(burst length x inter-burst pause) per system x aggressor x vector size.
+
+Routed through the scenario registry: each (system, aggressor) grid runs
+as ONE batched bench.run_grid call over sizes x (burst, pause) cells."""
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import cached_sweep, heatmap, size_label
-from repro.core import bench, congestion as cong
-from repro.core.fabric import systems
+from benchmarks.common import heatmap, scenario_rows, size_label
+from repro.core import scenarios
 
-SYSTEMS = ("cresco8", "leonardo", "lumi")
-AGGRESSORS = ("alltoall", "incast")
-BURSTS_MS = (0.5, 2.0, 8.0)
-PAUSES_MS = (0.2, 1.0, 8.0)
-SIZES = (512, 32 * 2 ** 10, 2 * 2 ** 20)
+SYSTEMS = scenarios.FIG5_SYSTEMS
+AGGRESSORS = scenarios.FIG5_AGGRESSORS
+SIZES = scenarios.FIG6_SIZES
 N_NODES = 64
-
-
-def run_point(system: str, aggr: str, vector_bytes: float,
-              burst_ms: float, pause_ms: float) -> dict:
-    r = bench.run_point(systems.get_system(system), N_NODES,
-                        "ring_allgather", aggr, float(vector_bytes),
-                        cong.bursty(float(burst_ms) * 1e-3,
-                                    float(pause_ms) * 1e-3),
-                        n_iters=25, warmup=5)
-    return {"ratio": round(r.ratio, 4)}
 
 
 def main(force: bool = False, quick: bool = False):
     sizes = (32 * 2 ** 10,) if quick else SIZES
-    bursts = (0.5, 8.0) if quick else BURSTS_MS
-    pauses = (0.2, 8.0) if quick else PAUSES_MS
-    points = [(s, a, v, b, p) for s in SYSTEMS for a in AGGRESSORS
-              for v in sizes for b in bursts for p in pauses]
-    rows = cached_sweep(
-        "fig6_bursty",
-        ["system", "aggressor", "vector_bytes", "burst_ms", "pause_ms"],
-        points, run_point, force=force)
+    rows = scenario_rows(scenarios.get("fig6_bursty", quick), force=force)
     for s in SYSTEMS:
         for a in AGGRESSORS:
             for v in sizes:

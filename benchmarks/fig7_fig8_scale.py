@@ -1,40 +1,21 @@
 """Paper Fig. 7 (CRESCO8, 128 nodes) and Fig. 8 (LUMI, 256 nodes): bursty
 congestion at larger scale. Includes the paper's 64 vs 128-node CRESCO8
-Incast comparison (wider congestion tree -> milder collapse)."""
+Incast comparison (wider congestion tree -> milder collapse).
+
+Routed through the scenario registry: each (system, nodes, aggressor)
+grid runs as ONE batched bench.run_grid call."""
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import cached_sweep, heatmap, size_label
-from repro.core import bench, congestion as cong
-from repro.core.fabric import systems
-
-BURSTS_MS = (0.5, 2.0, 8.0)
-PAUSES_MS = (0.2, 1.0, 8.0)
-
-
-def run_point(system: str, n_nodes: int, aggr: str, vector_bytes: float,
-              burst_ms: float, pause_ms: float) -> dict:
-    r = bench.run_point(systems.get_system(system), int(n_nodes),
-                        "ring_allgather", aggr, float(vector_bytes),
-                        cong.bursty(float(burst_ms) * 1e-3,
-                                    float(pause_ms) * 1e-3),
-                        n_iters=20, warmup=4)
-    return {"ratio": round(r.ratio, 4)}
+from benchmarks.common import heatmap, scenario_rows
+from repro.core import scenarios
 
 
 def main(force: bool = False, quick: bool = False):
     cells = [("cresco8", 64), ("cresco8", 128), ("lumi", 256)]
-    sizes = (2 * 2 ** 20,) if quick else (32 * 2 ** 10, 2 * 2 ** 20)
-    bursts = (2.0,) if quick else BURSTS_MS
-    pauses = (0.2, 8.0) if quick else PAUSES_MS
-    points = [(s, n, a, v, b, p) for (s, n) in cells
-              for a in ("alltoall", "incast")
-              for v in sizes for b in bursts for p in pauses]
-    rows = cached_sweep(
-        "fig7_fig8_scale",
-        ["system", "n_nodes", "aggressor", "vector_bytes", "burst_ms",
-         "pause_ms"], points, run_point, force=force)
+    rows = scenario_rows(scenarios.get("fig7_fig8_scale", quick),
+                         force=force)
     for (s, n) in cells:
         for a in ("alltoall", "incast"):
             sub = [r for r in rows if r["system"] == s

@@ -1,0 +1,41 @@
+"""Beyond-paper congestion families enabled by traceable envelopes:
+ramp onsets, random telegraph aggressors, and multi-tenant envelope mixes
+(scenario registry: ramp_onset / random_telegraph / multi_tenant)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import scenario_rows, size_label
+from repro.core import scenarios
+
+FAMILIES = ("ramp_onset", "random_telegraph", "multi_tenant")
+
+
+def main(force: bool = False, quick: bool = False):
+    all_rows = []
+    for name in FAMILIES:
+        scen = scenarios.get(name, quick)
+        rows = scenario_rows(scen, force=force)
+        all_rows.extend(rows)
+        print(f"\n# {name} — {scen.description}")
+        print(f"{'system':>10} {'aggr':>9} {'size':>8} "
+              f"{'profile':>34} {'ratio':>7}")
+        for r in rows:
+            print(f"{r['system']:>10} {r['aggressor']:>9} "
+                  f"{size_label(r['vector_bytes']):>8} "
+                  f"{r['profile']:>34} {float(r['ratio']):>7.3f}")
+    # sanity narratives
+    ramp = [r for r in all_rows if r["profile"].startswith("ramp")]
+    if ramp:
+        worst = min(float(r["ratio"]) for r in ramp)
+        print(f"\n# ramp check: slowest-onset ratio floor {worst:.2f} "
+              "(ramps bound steady-state impact from above)")
+    return all_rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args()
+    main(force=a.force, quick=a.quick)

@@ -25,7 +25,7 @@ def main() -> None:
 
     from benchmarks import (collective_bench, fig1_breakdown, fig3_sawtooth,
                             fig4_nslb, fig5_steady, fig6_bursty,
-                            fig7_fig8_scale)
+                            fig7_fig8_scale, new_scenarios)
 
     benches = {
         "fig1": lambda: fig1_breakdown.main(force=args.force),
@@ -35,6 +35,8 @@ def main() -> None:
         "fig6": lambda: fig6_bursty.main(force=args.force, quick=args.quick),
         "fig7_fig8": lambda: fig7_fig8_scale.main(force=args.force,
                                                   quick=args.quick),
+        "scenarios": lambda: new_scenarios.main(force=args.force,
+                                                quick=args.quick),
         "collectives": lambda: collective_bench.main(force=args.force),
     }
     only = {s for s in args.only.split(",") if s}

@@ -1,6 +1,10 @@
-"""The paper's methodology end-to-end on one fabric: inject steady and
-bursty congestion against a victim AllGather on the Leonardo model and
-print the resulting slowdown matrix — a miniature of Fig. 5/6.
+"""The paper's methodology end-to-end on one fabric: inject steady, bursty,
+ramp, and multi-tenant congestion against a victim AllGather and print the
+resulting slowdown matrix — a miniature of Fig. 5/6 plus the extended
+envelope families.
+
+All profiles for one aggressor run as a SINGLE batched grid
+(bench.run_grid): one flow set, one compile, every cell vmapped.
 
     PYTHONPATH=src python examples/congestion_study.py [--system lumi]
 """
@@ -24,17 +28,21 @@ def main():
           f"(interleaved victims/aggressors), victim=ring AllGather "
           f"{args.vector_kib}KiB\n")
 
-    print(f"{'aggressor':>10} {'profile':>16} {'ratio':>7}   (higher=better)")
+    profiles = [
+        cong.steady(),
+        cong.bursty(2e-3, 0.2e-3),
+        cong.bursty(2e-3, 8e-3),
+        cong.ramp(8e-3),
+        cong.random_onoff(2e-3, 2e-3),
+        cong.multi_tenant((cong.bursty(0.5e-3, 0.5e-3), 0.5),
+                          (cong.bursty(4e-3, 4e-3), 0.5)),
+    ]
+    print(f"{'aggressor':>10} {'profile':>26} {'ratio':>7}   (higher=better)")
     for aggr in ("alltoall", "incast"):
-        r = bench.run_point(sysp, args.nodes, "ring_allgather", aggr, v,
-                            cong.steady(), n_iters=25, warmup=5)
-        print(f"{aggr:>10} {'steady':>16} {r.ratio:>7.3f}")
-        for burst_ms, pause_ms in ((2.0, 0.2), (2.0, 8.0)):
-            prof = cong.bursty(burst_ms * 1e-3, pause_ms * 1e-3)
-            r = bench.run_point(sysp, args.nodes, "ring_allgather", aggr, v,
-                                prof, n_iters=25, warmup=5)
-            print(f"{aggr:>10} {f'burst {burst_ms}/{pause_ms}ms':>16} "
-                  f"{r.ratio:>7.3f}")
+        results = bench.run_grid(sysp, args.nodes, "ring_allgather", aggr,
+                                 [v], profiles, n_iters=25, warmup=5)
+        for r in results:
+            print(f"{aggr:>10} {r.profile:>26} {r.ratio:>7.3f}")
     print("\npaper Obs.3: short pauses leave no drain time -> lower ratio;")
     print("paper Obs.4: slingshot (lumi) stays near 1.0 everywhere.")
 

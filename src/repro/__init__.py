@@ -1,0 +1,1 @@
+from repro import jax_compat  # noqa: F401  (installs jax 0.4.x polyfills)

@@ -5,16 +5,30 @@ report mean iteration time and the uncongested/congested ratio.
 The paper uses 1000 iterations / 100 warmup on real fabrics; the fluid
 simulator converges much faster (no per-packet noise), so the default here
 is 60/10 — scaled, and noted in EXPERIMENTS.md.
+
+Two entry points:
+
+* :func:`run_point` — one heatmap cell (baseline + congested, batched as a
+  2-cell grid internally).
+* :func:`run_grid` — a whole (vector size x profile x baseline/congested)
+  grid on ONE flow set, executed by a single ``jit(vmap(...))`` call
+  (simulator.run_cells). This is the fast path for the paper's Figs. 5-8
+  sweeps: one compile, all cells advance in lockstep.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import congestion as cong
-from repro.core.fabric.simulator import FabricSim
+from repro.core.fabric.simulator import (FabricGeometry, SimParams,
+                                         check_iter_budget, make_geometry,
+                                         make_params, run_cell, run_cells,
+                                         stack_params, summarize)
 from repro.core.fabric.systems import SystemPreset
 
 
@@ -63,37 +77,175 @@ def allocate(system: SystemPreset, n_nodes: int, seed: int = 7) -> np.ndarray:
     return np.sort(rng.choice(machine, size=n_nodes, replace=False))
 
 
+# --------------------------------------------------------------------------
+# dt selection
+# --------------------------------------------------------------------------
+
+# power-of-two microsecond ladder: neighboring grid cells snap to shared dt
+# values, so batched cells stay numerically comparable and JIT caches hit
+# across sweeps even when dt were a compile-time constant.
+DT_LADDER_S = tuple(2.0 ** k * 1e-6 for k in range(8))  # 1us .. 128us
+
+
+def quantize_dt(dt_raw: float) -> float:
+    """Snap down to the nearest ladder step (finer dt = more accurate)."""
+    for dt in reversed(DT_LADDER_S):
+        if dt <= dt_raw:
+            return dt
+    return DT_LADDER_S[0]
+
+
+def choose_dt(topo, n_victims: int, vector_bytes: float, lat: float) -> float:
+    """dt sized so one uncongested iteration spans ~100 steps."""
+    per_flow = vector_bytes / max(n_victims, 1)
+    t_est = max(per_flow / (topo.caps.max()), 2e-6) * 2 + lat
+    return quantize_dt(float(np.clip(t_est / 100.0, 1e-6, 200e-6)))
+
+
+# --------------------------------------------------------------------------
+# Case construction: one flow set, reused across a grid of cells
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GridCase:
+    """One (system, allocation, victim/aggressor collective) experiment;
+    the unit-vector flow set to be scaled per cell (victim bytes are linear
+    in the swept vector size)."""
+
+    system: SystemPreset
+    n_nodes: int
+    victim_coll: str
+    aggr_coll: str
+    topo: object
+    geom: FabricGeometry
+    unit_bytes: np.ndarray  # (F,) per-flow bytes at vector_bytes == 1.0
+    is_victim: np.ndarray  # (F,)
+    host_caps: np.ndarray  # (F,)
+    n_victims: int
+
+    def cell_params(self, vector_bytes: float, profile: cong.Profile,
+                    dt: float) -> SimParams:
+        bpi = np.where(self.is_victim, self.unit_bytes * vector_bytes,
+                       cong.AGGRESSOR_BYTES)
+        return make_params(self.system.cc, dt=dt, bytes_per_iter=bpi,
+                           host_caps=self.host_caps, env=profile.params())
+
+    def lat(self) -> float:
+        return cong.latency_model(self.victim_coll, self.n_victims)
+
+
+def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
+               aggr_coll: str, topo=None,
+               nodes: Optional[np.ndarray] = None) -> GridCase:
+    """Build the flow set + geometry once for a whole grid of cells."""
+    if topo is None:
+        topo = machine_topology(system)
+    if nodes is None:
+        nodes = allocate(system, n_nodes)
+    # the paper's §III-A interleaved split (applied even with no aggressor
+    # collective, so baseline and congested cells share the victim set)
+    vidx, aidx = cong.interleaved_split(n_nodes)
+    victims, aggressors = nodes[vidx], nodes[aidx]
+    flows = cong.build_flowset(topo, victims, aggressors, victim_coll,
+                               aggr_coll, 1.0,
+                               routing_mode=system.static_routing,
+                               k_max=system.k_max)
+    geom = make_geometry(topo, flows, routing=system.routing)
+    return GridCase(system=system, n_nodes=n_nodes, victim_coll=victim_coll,
+                    aggr_coll=aggr_coll, topo=topo, geom=geom,
+                    unit_bytes=flows.bytes_per_iter.copy(),
+                    is_victim=flows.is_victim, host_caps=flows.host_caps,
+                    n_victims=len(victims))
+
+
+# --------------------------------------------------------------------------
+# Batched grid runner (the vmap hot path)
+# --------------------------------------------------------------------------
+
+
+def run_grid(system: SystemPreset, n_nodes: int, victim_coll: str,
+             aggr_coll: str, sizes: Sequence[float],
+             profiles: Sequence[cong.Profile], *, n_iters: int = 60,
+             warmup: int = 10, dt: Optional[float] = None,
+             max_steps: int = 200_000, chunk: int = 2048,
+             trace_stride: int = 8) -> List[BenchResult]:
+    """All (vector size x profile) cells of one experiment in a single
+    batched call: a per-size baseline (aggressors off) plus one congested
+    cell per profile, sharing one FlowSet/geometry and one compile."""
+    check_iter_budget(n_iters)
+    case = build_case(system, n_nodes, victim_coll, aggr_coll)
+    lat = case.lat()
+
+    cells: List[Tuple[float, cong.Profile]] = []
+    dts: List[float] = []
+    for v in sizes:
+        cell_dt = dt if dt is not None else choose_dt(
+            case.topo, case.n_victims, float(v), lat)
+        for prof in [cong.no_congestion()] + list(profiles):
+            cells.append((float(v), prof))
+            dts.append(cell_dt)
+
+    params = stack_params([case.cell_params(v, prof, d)
+                           for (v, prof), d in zip(cells, dts)])
+    max_chunks = -(-max_steps // chunk)
+    out = run_cells(case.geom, params, jnp.asarray(n_iters, jnp.int32),
+                    chunk=chunk, max_chunks=max_chunks, stride=trace_stride)
+
+    per_prof = 1 + len(profiles)
+    results = []
+    for si, v in enumerate(sizes):
+        base_i = si * per_prof
+        base = summarize(out, n_iters=n_iters, warmup=warmup, dt=dts[base_i],
+                         chunk=chunk, stride=trace_stride, cell=base_i)
+        t_u = _mean_iter_time(base, lat)
+        for pi, prof in enumerate(profiles):
+            ci = base_i + 1 + pi
+            res = summarize(out, n_iters=n_iters, warmup=warmup, dt=dts[ci],
+                            chunk=chunk, stride=trace_stride, cell=ci)
+            t_c = _mean_iter_time(res, lat)
+            results.append(BenchResult(
+                system=system.name, n_nodes=n_nodes, victim=victim_coll,
+                aggressor=aggr_coll or "none", profile=prof.label(),
+                vector_bytes=float(v), t_uncongested_s=t_u,
+                t_congested_s=t_c,
+                ratio=t_u / t_c if t_c > 0 else 0.0,
+                victim_goodput_gbps=float(
+                    np.mean(res.victim_rate_trace[-200:]) * 8 / 1e9)
+                if len(res.victim_rate_trace) else 0.0,
+                n_iters=(base.n_done, res.n_done),
+            ))
+    return results
+
+
 def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
               aggr_coll: str, vector_bytes: float,
               profile: cong.Profile, *, n_iters: int = 60, warmup: int = 10,
               dt: Optional[float] = None, max_steps: int = 200_000,
               return_traces: bool = False):
-    """One heatmap cell: baseline (aggressors off) vs congested run."""
-    topo = machine_topology(system)
-    alloc = allocate(system, n_nodes)
-    vidx, aidx = cong.interleaved_split(n_nodes)
-    victims, aggressors = alloc[vidx], alloc[aidx]
-    flows = cong.build_flowset(topo, victims, aggressors, victim_coll,
-                               aggr_coll, vector_bytes,
-                               routing_mode=system.static_routing,
-                               k_max=system.k_max)
-    n_v = len(victims)
-    lat = cong.latency_model(victim_coll, n_v)
-    # dt sized so one uncongested iteration spans ~100 steps
-    if dt is None:
-        per_flow = vector_bytes / max(n_v, 1)
-        t_est = max(per_flow / (topo.caps.max()), 2e-6) * 2 + lat
-        dt = float(np.clip(t_est / 100.0, 1e-6, 200e-6))
+    """One heatmap cell: baseline (aggressors off) vs congested run.
 
-    sim = FabricSim(topo, flows, system.cc, routing=system.routing, dt=dt)
-    base = sim.run(n_iters=n_iters, warmup=warmup,
-                   envelope_fn=cong.no_congestion().envelope,
-                   max_steps=max_steps)
-    cong_res = sim.run(n_iters=n_iters, warmup=warmup,
-                       envelope_fn=profile.envelope, max_steps=max_steps)
+    Implemented as a 2-cell grid (baseline + congested batched in one call).
+    """
+    check_iter_budget(n_iters)
+    case = build_case(system, n_nodes, victim_coll, aggr_coll)
+    lat = case.lat()
+    if dt is None:
+        dt = choose_dt(case.topo, case.n_victims, vector_bytes, lat)
+    chunk, stride = 2048, 8
+    max_chunks = -(-max_steps // chunk)
+    params = stack_params([
+        case.cell_params(vector_bytes, cong.no_congestion(), dt),
+        case.cell_params(vector_bytes, profile, dt)])
+    out = run_cells(case.geom, params, jnp.asarray(n_iters, jnp.int32),
+                    chunk=chunk, max_chunks=max_chunks, stride=stride)
+    base = summarize(out, n_iters=n_iters, warmup=warmup, dt=dt, chunk=chunk,
+                     stride=stride, cell=0)
+    cong_res = summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
+                         chunk=chunk, stride=stride, cell=1)
     t_u = _mean_iter_time(base, lat)
     t_c = _mean_iter_time(cong_res, lat)
-    out = BenchResult(
+    res = BenchResult(
         system=system.name, n_nodes=n_nodes, victim=victim_coll,
         aggressor=aggr_coll or "none", profile=profile.kind,
         vector_bytes=vector_bytes, t_uncongested_s=t_u, t_congested_s=t_c,
@@ -104,8 +256,35 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
         n_iters=(base.n_done, cong_res.n_done),
     )
     if return_traces:
-        return out, base, cong_res
-    return out
+        return res, base, cong_res
+    return res
+
+
+# --------------------------------------------------------------------------
+# Single-trace helpers
+# --------------------------------------------------------------------------
+
+
+def _run_uncongested(system: SystemPreset, topo, nodes, coll: str,
+                     vector_bytes: float, *, dt: float, n_iters: int,
+                     warmup: int, max_steps: int = 200_000):
+    """One aggressor-free run on an explicit topology/allocation — the
+    shared helper behind goodput_trace and straggler_impact."""
+    check_iter_budget(n_iters)
+    flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
+                               routing_mode=system.static_routing,
+                               k_max=system.k_max)
+    geom = make_geometry(topo, flows, routing=system.routing)
+    params = make_params(system.cc, dt=dt,
+                         bytes_per_iter=flows.bytes_per_iter,
+                         host_caps=flows.host_caps,
+                         env=cong.no_congestion().params())
+    chunk, stride = 2048, 8
+    out = run_cell(geom, params, jnp.asarray(n_iters, jnp.int32),
+                   chunk=chunk, max_chunks=-(-max_steps // chunk),
+                   stride=stride)
+    return summarize(out, n_iters=n_iters, warmup=warmup, dt=dt, chunk=chunk,
+                     stride=stride)
 
 
 def goodput_trace(system: SystemPreset, n_nodes: int, coll: str,
@@ -115,50 +294,39 @@ def goodput_trace(system: SystemPreset, n_nodes: int, coll: str,
     topo = machine_topology(system) if system.machine_nodes \
         else system.make_topology(n_nodes)
     nodes = allocate(system, n_nodes)
-    flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
-                               routing_mode=system.static_routing,
-                               k_max=system.k_max)
-    sim = FabricSim(topo, flows, system.cc, routing=system.routing, dt=dt)
-    res = sim.run(n_iters=n_iters, warmup=5,
-                  envelope_fn=cong.no_congestion().envelope,
-                  max_steps=max_steps)
-    return res
+    return _run_uncongested(system, topo, nodes, coll, vector_bytes, dt=dt,
+                            n_iters=n_iters, warmup=5, max_steps=max_steps)
 
 
 def straggler_impact(system: SystemPreset, n_nodes: int, coll: str,
                      vector_bytes: float, *, slow_factor: float = 0.1,
-                     n_iters: int = 25) -> dict:
+                     n_iters: int = 25,
+                     straggler: Optional[int] = None) -> dict:
     """Model a straggler as a degraded injection link (DESIGN.md §7):
     one node's NIC runs at ``slow_factor`` of line rate; a synchronous
     collective is gated by its slowest member, so the iteration time
     stretches toward 1/slow_factor. Runtime policy (fault.StepMonitor +
-    elastic_plan) uses this as the model for when eviction pays."""
-    import copy
+    elastic_plan) uses this as the model for when eviction pays.
 
+    ``straggler`` indexes into the allocation (default: its middle node).
+    """
     topo = machine_topology(system) if system.machine_nodes \
         else system.make_topology(n_nodes)
     nodes = allocate(system, n_nodes)
-    flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
-                               routing_mode=system.static_routing,
-                               k_max=system.k_max)
-    sim = FabricSim(topo, flows, system.cc, routing=system.routing, dt=5e-6)
-    base = sim.run(n_iters=n_iters, warmup=5,
-                   envelope_fn=cong.no_congestion().envelope)
+    base = _run_uncongested(system, topo, nodes, coll, vector_bytes,
+                            dt=5e-6, n_iters=n_iters, warmup=5)
 
+    if straggler is None:
+        straggler = len(nodes) // 2
+    victim_node = int(nodes[straggler])
     topo_slow = copy.copy(topo)
     caps = topo.caps.copy()
-    victim_node = int(nodes[len(nodes) // 2])
     for li, (a, b) in enumerate(topo.link_names):
         if a == ("h", victim_node) or b == ("h", victim_node):
             caps[li] = caps[li] * slow_factor
     topo_slow.caps = caps
-    flows2 = cong.build_flowset(topo_slow, nodes, [], coll, "", vector_bytes,
-                                routing_mode=system.static_routing,
-                                k_max=system.k_max)
-    sim2 = FabricSim(topo_slow, flows2, system.cc, routing=system.routing,
-                     dt=5e-6)
-    slow = sim2.run(n_iters=n_iters, warmup=5,
-                    envelope_fn=cong.no_congestion().envelope)
+    slow = _run_uncongested(system, topo_slow, nodes, coll, vector_bytes,
+                            dt=5e-6, n_iters=n_iters, warmup=5)
     t_base = float(np.mean(base.iter_times)) if len(base.iter_times) else 0.0
     t_slow = float(np.mean(slow.iter_times)) if len(slow.iter_times) \
         else float("inf")

@@ -7,16 +7,22 @@ Implements the paper's methodology exactly:
   * aggressor patterns: AlltoAll (intermediate-switch stress) and Incast
     (edge stress), run in an endless loop;
   * congestion profiles: steady (§III-C) and bursty (§III-D) with
-    configurable (burst length, inter-burst pause) — the duty cycle.
+    configurable (burst length, inter-burst pause) — the duty cycle —
+    plus the extended traceable envelope families (ramp onset, random
+    telegraph, multi-tenant mixes) defined in envelopes.py.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.collectives import wire_bytes_model
+# Re-exported envelope layer (traceable profiles live in envelopes.py so
+# the simulator can import them without a cycle).
+from repro.core.envelopes import (ENV_COMPONENTS, Profile, bursty,  # noqa: F401
+                                  envelope_at, envelope_np, multi_tenant,
+                                  no_congestion, ramp, random_onoff, steady)
 from repro.core.fabric.routing import assign_paths
 from repro.core.fabric.simulator import FlowSet, pack_paths
 from repro.core.fabric.topology import Topology
@@ -26,39 +32,6 @@ def interleaved_split(n_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
     """Paper §III-A: alternate nodes between victims and aggressors."""
     ids = np.arange(n_nodes)
     return ids[ids % 2 == 0], ids[ids % 2 == 1]
-
-
-# --------------------------------------------------------------------------
-# Congestion profiles
-# --------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class Profile:
-    kind: str  # "off" | "steady" | "bursty"
-    burst_s: float = 0.0
-    pause_s: float = 0.0
-
-    def envelope(self, t0: float, n: int, dt: float) -> np.ndarray:
-        if self.kind == "off":
-            return np.zeros((n,), np.float32)
-        if self.kind == "steady":
-            return np.ones((n,), np.float32)
-        period = self.burst_s + self.pause_s
-        t = t0 + np.arange(n) * dt
-        return ((t % period) < self.burst_s).astype(np.float32)
-
-
-def steady() -> Profile:
-    return Profile("steady")
-
-
-def bursty(burst_s: float, pause_s: float) -> Profile:
-    return Profile("bursty", burst_s, pause_s)
-
-
-def no_congestion() -> Profile:
-    return Profile("off")
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,172 @@
+"""Parameterized congestion envelopes (paper §III-C/D, extended).
+
+An envelope modulates aggressor injection intensity over simulated time.
+Historically this was a host-side callback producing a per-step 0/1 array;
+it is now *data*: a fixed-size component table evaluated by a traceable
+function of sim time, so envelopes ride through ``jax.jit``/``jax.vmap``
+and a sweep over (burst, pause) duty cycles batches into one compile.
+
+An envelope is up to :data:`ENV_COMPONENTS` weighted components, each a row
+``[kind, p0, p1, weight, seed]``:
+
+* ``off``     — 0 everywhere (baseline runs).
+* ``steady``  — 1 everywhere (§III-C).
+* ``bursty``  — square wave, ``p0`` seconds on / ``p1`` seconds off (§III-D).
+* ``ramp``    — linear onset 0 -> 1 over ``p0`` seconds, then hold (models
+  tenants gradually starting — a congestion onset the paper's square
+  profiles cannot express).
+* ``random``  — random telegraph: time slots of length ``p0`` are on with
+  probability ``p0/(p0+p1)`` via a counter-hash PRNG, so the *mean* duty
+  cycle matches the equivalent bursty profile while burst placement is
+  irregular (multi-tenant background traffic is not periodic).
+
+Component weights sum the contributions and the result is clipped to
+[0, 1]; a mix of components models multi-tenant aggressor blends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+ENV_OFF = 0
+ENV_STEADY = 1
+ENV_BURSTY = 2
+ENV_RAMP = 3
+ENV_RANDOM = 4
+
+ENV_COMPONENTS = 4  # fixed component slots per envelope (vmap-stable shape)
+
+_KIND_IDS = {"off": ENV_OFF, "steady": ENV_STEADY, "bursty": ENV_BURSTY,
+             "ramp": ENV_RAMP, "random": ENV_RANDOM}
+
+
+def envelope_at(env, t):
+    """Traceable envelope value at sim time ``t`` (scalar in [0, 1]).
+
+    ``env`` is an (ENV_COMPONENTS, 5) float array of component rows. Written
+    in jnp so it lives inside the simulator step under jit/vmap.
+    """
+    import jax.numpy as jnp
+
+    kind = env[:, 0].astype(jnp.int32)
+    p0, p1, w, seed = env[:, 1], env[:, 2], env[:, 3], env[:, 4]
+    period = jnp.maximum(p0 + p1, 1e-12)
+    slot_len = jnp.maximum(p0, 1e-12)
+    on_bursty = ((t % period) < p0).astype(jnp.float32)
+    on_ramp = jnp.clip(t / slot_len, 0.0, 1.0)
+    slot = jnp.floor(t / slot_len).astype(jnp.uint32)
+    h = (slot + seed.astype(jnp.uint32) * jnp.uint32(7919)) \
+        * jnp.uint32(2654435761)
+    u = ((h >> jnp.uint32(8)) & jnp.uint32(0x7FFFFF)).astype(jnp.float32) \
+        / jnp.float32(0x800000)
+    on_random = (u < p0 / period).astype(jnp.float32)
+    val = jnp.select(
+        [kind == ENV_STEADY, kind == ENV_BURSTY, kind == ENV_RAMP,
+         kind == ENV_RANDOM],
+        [jnp.ones_like(on_ramp), on_bursty, on_ramp, on_random],
+        jnp.zeros_like(on_ramp))
+    return jnp.clip(jnp.sum(w * val), 0.0, 1.0)
+
+
+def envelope_np(env: np.ndarray, t: np.ndarray) -> np.ndarray:
+    """NumPy mirror of :func:`envelope_at`, vectorized over a time array
+    (host-side plotting / property tests / legacy callers)."""
+    t = np.asarray(t, np.float64)[..., None]  # (..., 1) vs (C,) components
+    kind = env[:, 0].astype(np.int64)
+    p0, p1, w, seed = env[:, 1], env[:, 2], env[:, 3], env[:, 4]
+    period = np.maximum(p0 + p1, 1e-12)
+    slot_len = np.maximum(p0, 1e-12)
+    on_bursty = ((t % period) < p0).astype(np.float64)
+    on_ramp = np.clip(t / slot_len, 0.0, 1.0)
+    # mod before the cast: off/steady rows leave slot_len at its 1e-12
+    # floor, whose huge quotient would otherwise overflow the uint32 cast
+    # (the selected value ignores those rows either way)
+    slot = np.mod(np.floor(t / slot_len), 2.0 ** 32).astype(np.uint32)
+    h = (slot + seed.astype(np.uint32) * np.uint32(7919)) \
+        * np.uint32(2654435761)
+    u = ((h >> np.uint32(8)) & np.uint32(0x7FFFFF)).astype(np.float64) \
+        / float(0x800000)
+    on_random = (u < p0 / period).astype(np.float64)
+    val = np.select(
+        [kind == ENV_STEADY, kind == ENV_BURSTY, kind == ENV_RAMP,
+         kind == ENV_RANDOM],
+        [np.ones_like(on_ramp), on_bursty, on_ramp, on_random], 0.0)
+    return np.clip((w * val).sum(-1), 0.0, 1.0)
+
+
+# --------------------------------------------------------------------------
+# Declarative profile objects
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """A named congestion profile; ``params()`` lowers it to the component
+    table the simulator consumes."""
+
+    kind: str  # "off" | "steady" | "bursty" | "ramp" | "random" | "mix"
+    burst_s: float = 0.0
+    pause_s: float = 0.0
+    seed: int = 0
+    components: Tuple[Tuple["Profile", float], ...] = ()
+
+    def params(self) -> np.ndarray:
+        rows = np.zeros((ENV_COMPONENTS, 5), np.float32)
+        comps = self.components if self.kind == "mix" else ((self, 1.0),)
+        if len(comps) > ENV_COMPONENTS:
+            raise ValueError(
+                f"mix of {len(comps)} components exceeds {ENV_COMPONENTS}")
+        for i, (prof, w) in enumerate(comps):
+            if prof.kind == "mix":
+                raise ValueError("nested mixes are not supported")
+            rows[i] = (_KIND_IDS[prof.kind], prof.burst_s, prof.pause_s,
+                       w, prof.seed)
+        return rows
+
+    def envelope(self, t0: float, n: int, dt: float) -> np.ndarray:
+        """Sampled envelope values (host side; legacy array interface)."""
+        t = t0 + np.arange(n) * dt
+        return envelope_np(self.params(), t).astype(np.float32)
+
+    def label(self) -> str:
+        if self.kind in ("off", "steady"):
+            return self.kind
+        if self.kind == "bursty":
+            return f"bursty {self.burst_s * 1e3:g}/{self.pause_s * 1e3:g}ms"
+        if self.kind == "ramp":
+            return f"ramp {self.burst_s * 1e3:g}ms"
+        if self.kind == "random":
+            return (f"random {self.burst_s * 1e3:g}/"
+                    f"{self.pause_s * 1e3:g}ms s{self.seed}")
+        parts = ", ".join(f"{w:g}*{p.label()}" for p, w in self.components)
+        return f"mix({parts})"
+
+
+def steady() -> Profile:
+    return Profile("steady")
+
+
+def bursty(burst_s: float, pause_s: float) -> Profile:
+    return Profile("bursty", burst_s, pause_s)
+
+
+def no_congestion() -> Profile:
+    return Profile("off")
+
+
+def ramp(ramp_s: float) -> Profile:
+    """Aggressors linearly ramp from idle to full blast over ``ramp_s``."""
+    return Profile("ramp", ramp_s)
+
+
+def random_onoff(burst_s: float, pause_s: float, seed: int = 1) -> Profile:
+    """Random telegraph with the same mean duty cycle as bursty(b, p)."""
+    return Profile("random", burst_s, pause_s, seed=seed)
+
+
+def multi_tenant(*weighted: Tuple[Profile, float]) -> Profile:
+    """Weighted blend of tenant envelopes (e.g. three bursty tenants with
+    different periods and phases sharing the aggressor nodes)."""
+    return Profile("mix", components=tuple(weighted))

@@ -1,4 +1,4 @@
-"""JAX fluid flow-level fabric simulator.
+"""JAX fluid flow-level fabric simulator — pure-functional core.
 
 Victim/aggressor flow sets traverse a :class:`Topology` under a congestion-
 control model (cc.py) and a routing policy. The inner loop is a
@@ -6,15 +6,30 @@ control model (cc.py) and a routing policy. The inner loop is a
 
   1. injection demand from per-flow CC rate limits,
   2. (adaptive routing) per-flow path choice by min queue occupancy,
-  3. approximate max-min fair allocation (iterative proportional scaling),
+  3. staged feed-forward propagation (FIFO fluid sharing per hop),
   4. queue integration (offered load vs capacity) + ECN/credit signals,
   5. CC rate update per fabric model + optional backpressure spreading,
   6. victim-iteration completion bookkeeping (the paper's 1000-iteration
      protocol, scaled: see bench.py).
 
-Approximations are documented in DESIGN.md; the validation targets are the
-paper's observed *behaviors* (sawtooth, NSLB flat-line, incast collapse,
-duty-cycle sensitivity), which emerge from the mechanisms, not from fitting.
+The engine is split into two pytrees:
+
+* :class:`FabricGeometry` — the static structure of one experiment (packed
+  paths, link capacities, switch adjacency). Constant across a parameter
+  sweep; its array shapes key the JIT cache.
+* :class:`SimParams` — everything a sweep varies: CC scalars, ``dt``,
+  per-flow bytes targets, and the congestion-envelope parameters. All
+  leaves are traced, so a grid of cells batches under ``jax.vmap`` with a
+  single compile (bench.run_grid).
+
+CC kind and the congestion envelope are *data*: the per-kind update is a
+``lax.switch`` over branch functions and the aggressor envelope is a
+traceable function of sim time (congestion.envelope_at), so cells with
+different fabrics and different burst/pause duty cycles coexist in one
+batched call. Approximations are documented in DESIGN.md; the validation
+targets are the paper's observed *behaviors* (sawtooth, NSLB flat-line,
+incast collapse, duty-cycle sensitivity), which emerge from the mechanisms,
+not from fitting.
 """
 from __future__ import annotations
 
@@ -29,6 +44,18 @@ import numpy as np
 from repro.core.fabric.cc import (CCParams, KIND_AI_ECN, KIND_DCQCN, KIND_IB,
                                   KIND_SLINGSHOT, ROUTE_ADAPTIVE, ROUTE_FIXED)
 from repro.core.fabric.topology import Topology
+from repro.core.envelopes import ENV_COMPONENTS, envelope_at, no_congestion
+
+# Fixed iteration-time buffer: n_iters is traced (no recompile across
+# protocols); completed iterations beyond the buffer fold into the last slot.
+TDONE_SLOTS = 96
+
+
+def check_iter_budget(n_iters: int) -> None:
+    if n_iters > TDONE_SLOTS:
+        raise ValueError(
+            f"n_iters={n_iters} exceeds the {TDONE_SLOTS}-slot iteration "
+            "buffer (raise TDONE_SLOTS or lower n_iters)")
 
 
 @dataclasses.dataclass
@@ -64,6 +91,392 @@ def pack_paths(paths_per_flow: List[List[List[int]]], sink: int, k_max: int = 4)
     return out, n_paths, plen
 
 
+# --------------------------------------------------------------------------
+# Static geometry pytree
+# --------------------------------------------------------------------------
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["caps_pad", "caps_finite", "dst_sw", "src_sw", "paths",
+                      "n_paths", "spray_choice", "path_len", "is_victim",
+                      "fixed_choice", "src_id"],
+         meta_fields=["L", "n_sw", "n_src", "routing"])
+@dataclasses.dataclass(frozen=True)
+class FabricGeometry:
+    """Everything structural: link capacities, switch adjacency, packed
+    flow paths. Built once per (topology, flow set); shared by every cell
+    of a parameter sweep."""
+
+    caps_pad: jnp.ndarray  # (L+1,) with inf sink
+    caps_finite: jnp.ndarray  # (L+1,) with 1.0 sink
+    dst_sw: jnp.ndarray  # (L+1,) switch fed by each link (0 = host)
+    src_sw: jnp.ndarray  # (L+1,) switch feeding each link (0 = host)
+    paths: jnp.ndarray  # (F, K, H)
+    n_paths: jnp.ndarray  # (F,)
+    spray_choice: jnp.ndarray  # (F,) deterministic sprayed home path
+    path_len: jnp.ndarray  # (F, K) float
+    is_victim: jnp.ndarray  # (F,) bool
+    fixed_choice: jnp.ndarray  # (F,)
+    src_id: jnp.ndarray  # (F,)
+    L: int
+    n_sw: int
+    n_src: int
+    routing: int
+
+    @property
+    def n_flows(self) -> int:
+        return self.is_victim.shape[0]
+
+
+def make_geometry(topo: Topology, flows: FlowSet,
+                  routing: int = ROUTE_FIXED) -> FabricGeometry:
+    L = len(topo.caps)
+    caps_pad = jnp.asarray(np.concatenate([topo.caps, [np.inf]]), jnp.float32)
+    caps_finite = jnp.asarray(np.concatenate([topo.caps, [1.0]]), jnp.float32)
+    # link <-> switch adjacency for backpressure spreading
+    sw_ids: dict = {}
+    dst_sw = np.zeros(L + 1, np.int32)
+    src_sw = np.zeros(L + 1, np.int32)
+    for li, (a, b) in enumerate(topo.link_names):
+        if not (isinstance(b, tuple) and b[0] == "h"):
+            dst_sw[li] = 1 + sw_ids.setdefault(b, len(sw_ids))
+        if not (isinstance(a, tuple) and a[0] == "h"):
+            src_sw[li] = 1 + sw_ids.setdefault(a, len(sw_ids))
+    n_sw = len(sw_ids) + 2  # 0 == "no switch" (host endpoints)
+    # sprayed "home" path per flow: deterministic hash spread over the
+    # candidates so concurrent flows do not herd onto one port
+    F = flows.n_flows
+    spray = (np.arange(F, dtype=np.int64) * 2654435761 % (1 << 31)) \
+        % np.maximum(flows.n_paths, 1)
+    return FabricGeometry(
+        caps_pad=caps_pad, caps_finite=caps_finite,
+        dst_sw=jnp.asarray(dst_sw), src_sw=jnp.asarray(src_sw),
+        paths=jnp.asarray(flows.paths), n_paths=jnp.asarray(flows.n_paths),
+        spray_choice=jnp.asarray(spray.astype(np.int32)),
+        path_len=jnp.asarray(flows.path_len, jnp.float32),
+        is_victim=jnp.asarray(flows.is_victim),
+        fixed_choice=jnp.asarray(flows.fixed_choice),
+        src_id=jnp.asarray(flows.src_id, jnp.int32),
+        L=L, n_sw=n_sw, n_src=int(flows.src_id.max()) + 1, routing=routing)
+
+
+# --------------------------------------------------------------------------
+# Traced sweep parameters
+# --------------------------------------------------------------------------
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["dt", "bytes_per_iter", "host_caps", "env", "kind",
+                      "qmax_bytes", "kmin", "kmax", "md", "rai_frac",
+                      "cc_interval_s", "hol_factor", "hol_start",
+                      "min_rate_frac", "follow_tau_s", "follow_gain",
+                      "thresh_adapt", "burst_jitter", "iter_drain"],
+         meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Traced per-cell parameters. Every leaf is an array, so a stack of
+    cells (leading batch axis on each leaf) vmaps through the engine."""
+
+    dt: jnp.ndarray  # () seconds
+    bytes_per_iter: jnp.ndarray  # (F,)
+    host_caps: jnp.ndarray  # (F,)
+    env: jnp.ndarray  # (ENV_COMPONENTS, 5) congestion-envelope components
+    # CC scalars (cc.CCParams lowered to data; kind selects the update rule)
+    kind: jnp.ndarray  # () int32
+    qmax_bytes: jnp.ndarray
+    kmin: jnp.ndarray
+    kmax: jnp.ndarray
+    md: jnp.ndarray
+    rai_frac: jnp.ndarray
+    cc_interval_s: jnp.ndarray
+    hol_factor: jnp.ndarray
+    hol_start: jnp.ndarray
+    min_rate_frac: jnp.ndarray
+    follow_tau_s: jnp.ndarray
+    follow_gain: jnp.ndarray
+    thresh_adapt: jnp.ndarray
+    burst_jitter: jnp.ndarray
+    iter_drain: jnp.ndarray
+
+
+def make_params(cc: CCParams, *, dt: float, bytes_per_iter: np.ndarray,
+                host_caps: np.ndarray, env: np.ndarray) -> SimParams:
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    return SimParams(
+        dt=f32(dt), bytes_per_iter=f32(bytes_per_iter),
+        host_caps=f32(host_caps), env=f32(env),
+        kind=jnp.asarray(cc.kind, jnp.int32),
+        qmax_bytes=f32(cc.qmax_bytes), kmin=f32(cc.kmin), kmax=f32(cc.kmax),
+        md=f32(cc.md), rai_frac=f32(cc.rai_frac),
+        cc_interval_s=f32(cc.cc_interval_s), hol_factor=f32(cc.hol_factor),
+        hol_start=f32(cc.hol_start), min_rate_frac=f32(cc.min_rate_frac),
+        follow_tau_s=f32(cc.follow_tau_s), follow_gain=f32(cc.follow_gain),
+        thresh_adapt=f32(1.0 if cc.thresh_adapt else 0.0),
+        burst_jitter=f32(cc.burst_jitter), iter_drain=f32(cc.iter_drain))
+
+
+def stack_params(params: List[SimParams]) -> SimParams:
+    """Stack per-cell SimParams into one batched pytree (leading axis)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
+
+
+# --------------------------------------------------------------------------
+# Pure step / run functions
+# --------------------------------------------------------------------------
+
+
+def init_state(geom: FabricGeometry, p: SimParams):
+    F = geom.n_flows
+    return {
+        "c": p.host_caps,
+        "rem": jnp.where(geom.is_victim, p.bytes_per_iter, 1e30),
+        "q": jnp.zeros((geom.L + 1,), jnp.float32),
+        "arr": jnp.zeros((geom.L + 1,), jnp.float32),
+        "thresh": jnp.full((geom.L + 1,), jnp.float32(1.0)) * p.kmin
+        * p.qmax_bytes,
+        "last_dec": jnp.zeros((F,), jnp.float32),
+        "it": jnp.zeros((), jnp.int32),
+        "t_done": jnp.zeros((TDONE_SLOTS,), jnp.float32),
+        "qd_acc": jnp.zeros((), jnp.float32),
+        "t": jnp.zeros((), jnp.float32),
+    }
+
+
+def _cc_update(p: SimParams, c, a, fmark, fstrength, can_dec):
+    """Branchless CC dispatch: the per-fabric rate update is a lax.switch
+    over ``p.kind``, so fabric kind is data (vmap lowers it to a select
+    across branches — cells with different fabrics batch together)."""
+    inc = p.rai_frac * p.host_caps * (p.dt / 1e-3)
+    # credit-window follower (ib / slingshot); tau guarded for the kinds
+    # that leave it at 0 — their branches never read ``f``.
+    f = 1.0 - jnp.exp(-p.dt / jnp.maximum(p.follow_tau_s, 1e-9))
+
+    def dcqcn(_):
+        dec = fmark & can_dec
+        return jnp.where(dec, c * p.md, c + inc), dec
+
+    def ib(_):
+        # credit semantics: the send window tracks what actually drains
+        # (hop-by-hop credits), SYMMETRICALLY — senders pause when the
+        # downstream buffer fills and resume the instant it drains. The
+        # overshoot keeps the hot buffer fed (full, not at the mark
+        # point); FECN/BECN marking is the slower outer loop.
+        c2 = (1 - f) * c + f * jnp.maximum(
+            a * p.follow_gain, p.min_rate_frac * p.host_caps)
+        dec = fmark & can_dec
+        return jnp.where(dec, c2 * p.md, c2 + inc), dec
+
+    def slingshot(_):
+        # throttle only flows actually bottlenecked
+        bottlenecked = fmark & (a < 0.95 * c)
+        c2 = jnp.where(bottlenecked,
+                       (1 - f) * c + f * a * p.follow_gain,
+                       c + inc)
+        return c2, bottlenecked & can_dec
+
+    def ai_ecn(_):
+        dec = fmark & can_dec
+        return jnp.where(dec, c * (1.0 - (1.0 - p.md) * fstrength),
+                         c + inc), dec
+
+    branches = [None] * 4
+    branches[KIND_DCQCN] = dcqcn
+    branches[KIND_IB] = ib
+    branches[KIND_SLINGSHOT] = slingshot
+    branches[KIND_AI_ECN] = ai_ecn
+    return jax.lax.switch(p.kind, branches, None)
+
+
+def step(geom: FabricGeometry, p: SimParams, state):
+    dt = p.dt
+    # aggressor envelope: traceable function of sim time (no host callback)
+    env_t = envelope_at(p.env, state["t"])
+    alive = state["rem"] > 0
+    active = (geom.is_victim | (env_t > 0)) & alive
+    gate = jnp.where(geom.is_victim, 1.0, env_t) * alive
+    inject = state["c"] * gate
+    # NIC limit: a source's flows share its injection link
+    src_load = jnp.zeros((geom.n_src,), jnp.float32).at[geom.src_id].add(
+        inject)
+    scale = jnp.minimum(1.0, p.host_caps
+                        / jnp.maximum(src_load[geom.src_id], 1.0))
+    inject = inject * scale
+
+    # ---- routing: spray + congestion-triggered rerouting ----
+    # Production AR does NOT send every flow to the globally least-loaded
+    # port (that herds and oscillates); flows keep a sprayed home path
+    # and move off it only when its occupancy is clearly worse than the
+    # best alternative (hysteresis).
+    if geom.routing == ROUTE_ADAPTIVE:
+        occ = state["q"] / p.qmax_bytes
+        score = jnp.max(occ[geom.paths], axis=2) \
+            + 0.05 * geom.path_len / jnp.maximum(geom.path_len[:, :1], 1)
+        score = jnp.where(jnp.arange(geom.paths.shape[1])[None, :]
+                          < geom.n_paths[:, None], score, jnp.inf)
+        best = jnp.argmin(score, axis=1)
+        home = geom.spray_choice
+        home_score = jnp.take_along_axis(score, home[:, None], 1)[:, 0]
+        best_score = jnp.min(score, axis=1)
+        choice = jnp.where(home_score > best_score + 0.10, best, home)
+    else:
+        choice = geom.fixed_choice
+    plinks = jnp.take_along_axis(
+        geom.paths, choice[:, None, None], axis=1)[:, 0]  # (F, H)
+    valid = plinks < geom.L
+
+    # ---- lossless backpressure (credit/PFC head-of-line stall) ----
+    # A switch whose egress queue saturates exhausts upstream credits /
+    # emits PFC pauses; ingress links feeding that switch lose service,
+    # stalling flows that traverse it (victims included). The stall is
+    # weighted by the saturated egresses' share of the switch's traffic:
+    # pause frames only cover buffer pools filled by hot-destined
+    # packets, so a switch with one hot egress among many mostly-idle
+    # ones only mildly degrades unrelated ingress traffic. This is the
+    # congestion-tree mechanism behind the paper's Incast collapse.
+    # hol_factor == 0 (per-flow state, e.g. Slingshot) -> stall == 1.
+    occ_prev = state["q"] / p.qmax_bytes
+    sat_l = jnp.clip((occ_prev - p.hol_start)
+                     / (1.0 - p.hol_start), 0.0, 1.0)
+    # share weighted by buffered bytes: traffic draining through
+    # idle egresses holds no buffer and casts no backpressure
+    hot_q = jnp.zeros((geom.n_sw,), jnp.float32).at[
+        geom.src_sw].add(state["q"] * sat_l)
+    tot_q = jnp.zeros((geom.n_sw,), jnp.float32).at[
+        geom.src_sw].add(state["q"])
+    share = hot_q / jnp.maximum(tot_q, 1.0)
+    sw_sat = jnp.zeros((geom.n_sw,), jnp.float32).at[
+        geom.src_sw].max(sat_l)
+    stall = 1.0 - p.hol_factor * sw_sat * share
+    stall = stall.at[0].set(1.0)  # 0 == host endpoint
+    caps_eff = geom.caps_finite * stall[geom.dst_sw]
+
+    # ---- staged propagation + queues ----
+    # Paths are feed-forward by fabric stage (host -> leaf -> spine ->
+    # leaf -> host), so a flow's arrival rate at hop h is its injection
+    # rate scaled down by every oversubscribed upstream hop (FIFO fluid
+    # sharing). Queues then build only where arrivals genuinely exceed
+    # service — an aggressor that is bottlenecked at its own NIC no
+    # longer floods transit queues with phantom demand.
+    r = inject
+    arrival = jnp.zeros((geom.L + 1,), jnp.float32)
+    for h in range(plinks.shape[1]):
+        lk = plinks[:, h]
+        contrib = r * valid[:, h]
+        load = jnp.zeros((geom.L + 1,), jnp.float32).at[lk].add(contrib)
+        arrival = arrival + load
+        over = jnp.maximum(load / caps_eff, 1.0)
+        r = jnp.where(valid[:, h], r / over[lk], r)
+    a = r  # achieved end-to-end rate
+    q = jnp.clip(state["q"] + (arrival * (1.0 + p.burst_jitter)
+                               - caps_eff) * dt,
+                 0.0, p.qmax_bytes)
+    q = q.at[geom.L].set(0.0)
+
+    # ---- signals ----
+    # AI-ECN: threshold tracks a fraction of the observed queue so
+    # marking strength is proportional, not bang-bang. thresh_adapt == 0
+    # keeps the static kmin threshold.
+    adapted = jnp.clip(0.9 * state["thresh"] + 0.1 * (0.5 * q + p.kmin
+                                                      * p.qmax_bytes),
+                       0.05 * p.qmax_bytes, p.kmax * p.qmax_bytes)
+    thresh = jnp.where(p.thresh_adapt > 0, adapted, state["thresh"])
+    over_thresh = q > thresh
+    fmark = jnp.any(over_thresh[plinks] & valid, axis=1)
+    # proportional mark strength (ai_ecn) in [0, 1]
+    strength_l = jnp.clip((q - thresh)
+                          / (p.kmax * p.qmax_bytes - thresh + 1.0),
+                          0.0, 1.0)
+    fstrength = jnp.max(jnp.where(valid, strength_l[plinks], 0.0), axis=1)
+
+    # ---- CC update (lax.switch over fabric kind) ----
+    can_dec = state["last_dec"] >= p.cc_interval_s
+    c, dec = _cc_update(p, state["c"], a, fmark, fstrength, can_dec)
+    # CC state only evolves for flows that are actually transmitting —
+    # an idle flow (finished its iteration early, or paused aggressor)
+    # keeps its rate limit.
+    c = jnp.where(active, c, state["c"])
+    dec = dec & active
+    c = jnp.clip(c, p.min_rate_frac * p.host_caps, p.host_caps)
+    last_dec = jnp.where(dec, 0.0, state["last_dec"] + dt)
+
+    # ---- progress + iteration bookkeeping ----
+    rem = state["rem"] - a * dt
+    vdone = ~jnp.any(geom.is_victim & (rem > 0))
+    t_new = state["t"] + dt
+    it = state["it"]
+    slot = jnp.minimum(it, TDONE_SLOTS - 1)
+    t_done = jnp.where(vdone, state["t_done"].at[slot].set(t_new),
+                       state["t_done"])
+    it = it + vdone.astype(jnp.int32)
+    rem = jnp.where(vdone & geom.is_victim, p.bytes_per_iter, rem)
+    # synchronization gap between victim iterations partially drains queues
+    q = jnp.where(vdone, q * p.iter_drain, q)
+
+    # queueing delay experienced by victim flows (seconds)
+    qdel = jnp.max(jnp.where(valid, (q / geom.caps_finite)[plinks], 0.0),
+                   axis=1)
+    mean_qdel = jnp.sum(qdel * geom.is_victim) / jnp.maximum(
+        jnp.sum(geom.is_victim), 1)
+    vict_goodput = jnp.sum(a * geom.is_victim)
+
+    new_state = {"c": c, "rem": rem, "q": q, "arr": arrival,
+                 "thresh": thresh,
+                 "last_dec": last_dec, "it": it, "t_done": t_done,
+                 "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
+    return new_state, vict_goodput
+
+
+def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
+              chunk: int, max_chunks: int, stride: int):
+    """Run one cell to ``n_iters`` victim iterations (or the step budget),
+    chunked so the early exit happens at chunk granularity. Pure and
+    vmap-able: under vmap the while_loop runs until every cell finishes."""
+    assert chunk % stride == 0, (chunk, stride)
+    trace_chunk = chunk // stride
+    state = init_state(geom, p)
+    buf = jnp.zeros((max_chunks * trace_chunk,), jnp.float32)
+
+    def cond(carry):
+        state, _, k = carry
+        return (k < max_chunks) & (state["it"] < n_iters)
+
+    def body(carry):
+        state, buf, k = carry
+        state, gp = jax.lax.scan(lambda s, _: step(geom, p, s), state, None,
+                                 length=chunk)
+        buf = jax.lax.dynamic_update_slice(buf, gp[::stride],
+                                           (k * trace_chunk,))
+        return state, buf, k + 1
+
+    state, buf, k = jax.lax.while_loop(
+        cond, body, (state, buf, jnp.zeros((), jnp.int32)))
+    return {"t_done": state["t_done"], "it": state["it"],
+            "qd_acc": state["qd_acc"], "t": state["t"],
+            "trace": buf, "chunks": k}
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride"))
+def run_cell(geom: FabricGeometry, p: SimParams, n_iters,
+             *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8):
+    return _run_cell(geom, p, n_iters, chunk, max_chunks, stride)
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride"))
+def run_cells(geom: FabricGeometry, params: SimParams, n_iters,
+              *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8):
+    """Batched engine: ``params`` has a leading cell axis on every leaf.
+    One compile serves the whole grid; all cells advance in lockstep until
+    the slowest finishes."""
+    return jax.vmap(
+        lambda pp: _run_cell(geom, pp, n_iters, chunk, max_chunks, stride)
+    )(params)
+
+
+# --------------------------------------------------------------------------
+# Result marshalling (host side)
+# --------------------------------------------------------------------------
+
+
 @dataclasses.dataclass
 class SimResult:
     iter_times: np.ndarray  # (n_done,) seconds per victim iteration
@@ -73,266 +486,59 @@ class SimResult:
     time_trace: np.ndarray
 
 
+def summarize(out: dict, *, n_iters: int, warmup: int, dt: float,
+              chunk: int, stride: int, cell: Optional[int] = None) -> SimResult:
+    """Build a :class:`SimResult` from (optionally batched) run outputs."""
+    pick = (lambda x: np.asarray(x)) if cell is None else \
+        (lambda x: np.asarray(x)[cell])
+    n_done = min(int(pick(out["it"])), n_iters, TDONE_SLOTS)
+    t_done = pick(out["t_done"])[:n_done]
+    iter_times = np.diff(np.concatenate([[0.0], t_done]))
+    iter_times = iter_times[warmup:] if n_done > warmup else iter_times
+    total_t = float(pick(out["t"])) or 1e-9
+    n_valid = int(pick(out["chunks"])) * (chunk // stride)
+    trace = pick(out["trace"])[:n_valid]
+    return SimResult(
+        iter_times=iter_times,
+        n_done=n_done,
+        mean_qdelay_s=float(pick(out["qd_acc"])) / total_t,
+        victim_rate_trace=trace,
+        time_trace=np.arange(n_valid) * stride * dt,
+    )
+
+
+# --------------------------------------------------------------------------
+# Object façade (compat): one geometry + one cc, sequential runs
+# --------------------------------------------------------------------------
+
+
 class FabricSim:
+    """Thin wrapper over the pure-functional engine for single-experiment
+    use. Sweeps should go through bench.run_grid, which batches cells."""
+
     def __init__(self, topo: Topology, flows: FlowSet, cc: CCParams,
                  routing: int = ROUTE_FIXED, dt: float = 10e-6,
                  maxmin_iters: int = 4, seed: int = 0):
         self.topo = topo
         self.flows = flows
         self.cc = cc
-        self.routing = routing
         self.dt = float(dt)
-        self.maxmin_iters = maxmin_iters
-        L = len(topo.caps)
-        self.L = L
-        self.caps_pad = jnp.asarray(
-            np.concatenate([topo.caps, [np.inf]]), jnp.float32)
-        self.caps_finite = jnp.asarray(
-            np.concatenate([topo.caps, [1.0]]), jnp.float32)
-        # link <-> switch adjacency for backpressure spreading
-        sw_ids: dict = {}
-        dst_sw = np.zeros(L + 1, np.int32)
-        src_sw = np.zeros(L + 1, np.int32)
-        for li, (a, b) in enumerate(topo.link_names):
-            if not (isinstance(b, tuple) and b[0] == "h"):
-                dst_sw[li] = 1 + sw_ids.setdefault(b, len(sw_ids))
-            if not (isinstance(a, tuple) and a[0] == "h"):
-                src_sw[li] = 1 + sw_ids.setdefault(a, len(sw_ids))
-        self.n_sw = len(sw_ids) + 2  # 0 == "no switch" (host endpoints)
-        self.dst_sw = jnp.asarray(dst_sw, jnp.int32)
-        self.src_sw = jnp.asarray(src_sw, jnp.int32)
+        self.geom = make_geometry(topo, flows, routing)
 
-        self.paths = jnp.asarray(flows.paths)
-        self.n_paths = jnp.asarray(flows.n_paths)
-        # sprayed "home" path per flow: deterministic hash spread over the
-        # candidates so concurrent flows do not herd onto one port
-        F = flows.n_flows
-        spray = (np.arange(F, dtype=np.int64) * 2654435761 % (1 << 31)) \
-            % np.maximum(flows.n_paths, 1)
-        self.spray_choice = jnp.asarray(spray.astype(np.int32))
-        self.path_len = jnp.asarray(flows.path_len, jnp.float32)
-        self.is_victim = jnp.asarray(flows.is_victim)
-        self.bytes_per_iter = jnp.asarray(flows.bytes_per_iter, jnp.float32)
-        self.fixed_choice = jnp.asarray(flows.fixed_choice)
-        self.host_caps = jnp.asarray(flows.host_caps, jnp.float32)
-        self.src_id = jnp.asarray(flows.src_id, jnp.int32)
-        self.n_src = int(flows.src_id.max()) + 1
-        self._step_chunk = jax.jit(partial(self._run_chunk))
+    def params(self, profile=None) -> SimParams:
+        profile = profile or no_congestion()
+        return make_params(
+            self.cc, dt=self.dt, bytes_per_iter=self.flows.bytes_per_iter,
+            host_caps=self.flows.host_caps, env=profile.params())
 
-    # ------------------------------------------------------------------
-    def init_state(self, max_iters: int):
-        F = self.flows.n_flows
-        cc = self.cc
-        return {
-            "c": self.host_caps,
-            "rem": jnp.where(self.is_victim, self.bytes_per_iter, 1e30),
-            "q": jnp.zeros((self.L + 1,), jnp.float32),
-            "arr": jnp.zeros((self.L + 1,), jnp.float32),
-            "thresh": jnp.full((self.L + 1,), cc.kmin * cc.qmax_bytes,
-                               jnp.float32),
-            "last_dec": jnp.zeros((F,), jnp.float32),
-            "it": jnp.zeros((), jnp.int32),
-            "t_done": jnp.zeros((max_iters,), jnp.float32),
-            "qd_acc": jnp.zeros((), jnp.float32),
-            "t": jnp.zeros((), jnp.float32),
-        }
-
-    # ------------------------------------------------------------------
-    def _step(self, state, aggr_on):
-        cc, dt = self.cc, self.dt
-        F = self.flows.n_flows
-        active = (self.is_victim | (aggr_on > 0)) & (state["rem"] > 0)
-        inject = state["c"] * active
-        # NIC limit: a source's flows share its injection link
-        src_load = jnp.zeros((self.n_src,), jnp.float32).at[self.src_id].add(
-            inject)
-        scale = jnp.minimum(1.0, self.host_caps
-                            / jnp.maximum(src_load[self.src_id], 1.0))
-        inject = inject * scale
-
-        # ---- routing: spray + congestion-triggered rerouting ----
-        # Production AR does NOT send every flow to the globally least-loaded
-        # port (that herds and oscillates); flows keep a sprayed home path
-        # and move off it only when its occupancy is clearly worse than the
-        # best alternative (hysteresis).
-        if self.routing == ROUTE_ADAPTIVE:
-            occ = state["q"] / cc.qmax_bytes
-            score = jnp.max(occ[self.paths], axis=2) \
-                + 0.05 * self.path_len / jnp.maximum(self.path_len[:, :1], 1)
-            score = jnp.where(jnp.arange(self.paths.shape[1])[None, :]
-                              < self.n_paths[:, None], score, jnp.inf)
-            best = jnp.argmin(score, axis=1)
-            home = self.spray_choice
-            home_score = jnp.take_along_axis(score, home[:, None], 1)[:, 0]
-            best_score = jnp.min(score, axis=1)
-            choice = jnp.where(home_score > best_score + 0.10, best, home)
-        else:
-            choice = self.fixed_choice
-        plinks = jnp.take_along_axis(
-            self.paths, choice[:, None, None], axis=1)[:, 0]  # (F, H)
-        valid = plinks < self.L
-
-        # ---- lossless backpressure (credit/PFC head-of-line stall) ----
-        # A switch whose egress queue saturates exhausts upstream credits /
-        # emits PFC pauses; ingress links feeding that switch lose service,
-        # stalling flows that traverse it (victims included). The stall is
-        # weighted by the saturated egresses' share of the switch's traffic:
-        # pause frames only cover buffer pools filled by hot-destined
-        # packets, so a switch with one hot egress among many mostly-idle
-        # ones only mildly degrades unrelated ingress traffic. This is the
-        # congestion-tree mechanism behind the paper's Incast collapse.
-        # Slingshot tracks per-flow state -> hol_factor == 0 (no stall).
-        caps_eff = self.caps_finite
-        if cc.hol_factor > 0.0:
-            occ_prev = state["q"] / cc.qmax_bytes
-            sat_l = jnp.clip((occ_prev - cc.hol_start)
-                             / (1.0 - cc.hol_start), 0.0, 1.0)
-            # share weighted by buffered bytes: traffic draining through
-            # idle egresses holds no buffer and casts no backpressure
-            hot_q = jnp.zeros((self.n_sw,), jnp.float32).at[
-                self.src_sw].add(state["q"] * sat_l)
-            tot_q = jnp.zeros((self.n_sw,), jnp.float32).at[
-                self.src_sw].add(state["q"])
-            share = hot_q / jnp.maximum(tot_q, 1.0)
-            sw_sat = jnp.zeros((self.n_sw,), jnp.float32).at[
-                self.src_sw].max(sat_l)
-            stall = 1.0 - cc.hol_factor * sw_sat * share
-            stall = stall.at[0].set(1.0)  # 0 == host endpoint
-            caps_eff = self.caps_finite * stall[self.dst_sw]
-
-        # ---- staged propagation + queues ----
-        # Paths are feed-forward by fabric stage (host -> leaf -> spine ->
-        # leaf -> host), so a flow's arrival rate at hop h is its injection
-        # rate scaled down by every oversubscribed upstream hop (FIFO fluid
-        # sharing). Queues then build only where arrivals genuinely exceed
-        # service — an aggressor that is bottlenecked at its own NIC no
-        # longer floods transit queues with phantom demand.
-        r = inject
-        arrival = jnp.zeros((self.L + 1,), jnp.float32)
-        for h in range(plinks.shape[1]):
-            lk = plinks[:, h]
-            contrib = r * valid[:, h]
-            load = jnp.zeros((self.L + 1,), jnp.float32).at[lk].add(contrib)
-            arrival = arrival + load
-            over = jnp.maximum(load / caps_eff, 1.0)
-            r = jnp.where(valid[:, h], r / over[lk], r)
-        a = r  # achieved end-to-end rate
-        q = jnp.clip(state["q"] + (arrival * (1.0 + cc.burst_jitter)
-                                   - caps_eff) * dt,
-                     0.0, cc.qmax_bytes)
-        q = q.at[self.L].set(0.0)
-
-        # ---- signals ----
-        thresh = state["thresh"]
-        if cc.thresh_adapt:
-            # AI-ECN: threshold tracks a fraction of the observed queue so
-            # marking strength is proportional, not bang-bang.
-            thresh = jnp.clip(0.9 * thresh + 0.1 * (0.5 * q + cc.kmin
-                                                    * cc.qmax_bytes),
-                              0.05 * cc.qmax_bytes, cc.kmax * cc.qmax_bytes)
-        over_thresh = q > thresh
-        fmark = jnp.any(over_thresh[plinks] & valid, axis=1)
-        # proportional mark strength (ai_ecn) in [0, 1]
-        strength_l = jnp.clip((q - thresh)
-                              / (cc.kmax * cc.qmax_bytes - thresh + 1.0),
-                              0.0, 1.0)
-        fstrength = jnp.max(jnp.where(valid, strength_l[plinks], 0.0), axis=1)
-
-        # ---- CC update ----
-        c = state["c"]
-        can_dec = state["last_dec"] >= cc.cc_interval_s
-        inc = cc.rai_frac * self.host_caps * (dt / 1e-3)
-        if cc.kind == KIND_DCQCN:
-            dec = fmark & can_dec
-            c = jnp.where(dec, c * cc.md, c + inc)
-        elif cc.kind == KIND_AI_ECN:
-            dec = fmark & can_dec
-            c = jnp.where(dec, c * (1.0 - (1.0 - cc.md) * fstrength), c + inc)
-        elif cc.kind == KIND_IB:
-            # credit semantics: the send window tracks what actually drains
-            # (hop-by-hop credits), SYMMETRICALLY — senders pause when the
-            # downstream buffer fills and resume the instant it drains. The
-            # overshoot keeps the hot buffer fed (full, not at the mark
-            # point); FECN/BECN marking is the slower outer loop.
-            f = 1.0 - jnp.exp(-dt / cc.follow_tau_s)
-            c = (1 - f) * c + f * jnp.maximum(
-                a * cc.follow_gain, cc.min_rate_frac * self.host_caps)
-            dec = fmark & can_dec
-            c = jnp.where(dec, c * cc.md, c + inc)
-        else:  # slingshot: throttle only flows actually bottlenecked
-            f = 1.0 - jnp.exp(-dt / cc.follow_tau_s)
-            bottlenecked = fmark & (a < 0.95 * c)
-            c = jnp.where(bottlenecked,
-                          (1 - f) * c + f * a * cc.follow_gain,
-                          c + inc)
-            dec = bottlenecked & can_dec
-        # CC state only evolves for flows that are actually transmitting —
-        # an idle flow (finished its iteration early, or paused aggressor)
-        # keeps its rate limit.
-        c = jnp.where(active, c, state["c"])
-        dec = dec & active
-        c = jnp.clip(c, cc.min_rate_frac * self.host_caps, self.host_caps)
-        last_dec = jnp.where(dec, 0.0, state["last_dec"] + dt)
-
-        # ---- progress + iteration bookkeeping ----
-        rem = state["rem"] - a * dt
-        vdone = ~jnp.any(self.is_victim & (rem > 0))
-        t_new = state["t"] + dt
-        it = state["it"]
-        slot = jnp.minimum(it, state["t_done"].shape[0] - 1)
-        t_done = jnp.where(vdone, state["t_done"].at[slot].set(t_new),
-                           state["t_done"])
-        it = it + vdone.astype(jnp.int32)
-        rem = jnp.where(vdone & self.is_victim, self.bytes_per_iter, rem)
-        # synchronization gap between victim iterations partially drains queues
-        if cc.iter_drain < 1.0:
-            q = jnp.where(vdone, q * cc.iter_drain, q)
-
-        # queueing delay experienced by victim flows (seconds)
-        qdel = jnp.max(jnp.where(valid, (q / self.caps_finite)[plinks], 0.0),
-                       axis=1)
-        mean_qdel = jnp.sum(qdel * self.is_victim) / jnp.maximum(
-            jnp.sum(self.is_victim), 1)
-        vict_goodput = jnp.sum(a * self.is_victim)
-
-        new_state = {"c": c, "rem": rem, "q": q, "arr": arrival,
-                     "thresh": thresh,
-                     "last_dec": last_dec, "it": it, "t_done": t_done,
-                     "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
-        return new_state, (vict_goodput, mean_qdel)
-
-    def _run_chunk(self, state, envelope):
-        return jax.lax.scan(self._step, state, envelope)
-
-    # ------------------------------------------------------------------
-    def run(self, *, n_iters: int = 60, warmup: int = 10,
-            envelope_fn=None, max_steps: int = 400_000,
-            chunk: int = 2048, trace_stride: int = 8) -> SimResult:
+    def run(self, *, n_iters: int = 60, warmup: int = 10, profile=None,
+            max_steps: int = 400_000, chunk: int = 2048,
+            trace_stride: int = 8) -> SimResult:
         """Run until ``n_iters`` victim iterations complete (or budget)."""
-        state = self.init_state(n_iters + 8)
-        traces, times = [], []
-        steps = 0
-        while steps < max_steps:
-            t0 = steps * self.dt
-            if envelope_fn is None:
-                env = np.ones((chunk,), np.float32)
-            else:
-                env = envelope_fn(t0, chunk, self.dt).astype(np.float32)
-            state, (gp, _) = self._step_chunk(state, jnp.asarray(env))
-            traces.append(np.asarray(gp[::trace_stride]))
-            times.append(t0 + np.arange(0, chunk, trace_stride) * self.dt)
-            steps += chunk
-            if int(state["it"]) >= n_iters:
-                break
-        n_done = min(int(state["it"]), n_iters)
-        t_done = np.asarray(state["t_done"])[:n_done]
-        iter_times = np.diff(np.concatenate([[0.0], t_done]))
-        iter_times = iter_times[warmup:] if n_done > warmup else iter_times
-        total_t = float(state["t"]) or 1e-9
-        return SimResult(
-            iter_times=iter_times,
-            n_done=n_done,
-            mean_qdelay_s=float(state["qd_acc"]) / total_t,
-            victim_rate_trace=np.concatenate(traces) if traces else np.zeros(0),
-            time_trace=np.concatenate(times) if times else np.zeros(0),
-        )
+        check_iter_budget(n_iters)
+        max_chunks = -(-max_steps // chunk)
+        out = run_cell(self.geom, self.params(profile),
+                       jnp.asarray(n_iters, jnp.int32), chunk=chunk,
+                       max_chunks=max_chunks, stride=trace_stride)
+        return summarize(out, n_iters=n_iters, warmup=warmup, dt=self.dt,
+                         chunk=chunk, stride=trace_stride)

@@ -1,0 +1,228 @@
+"""Declarative scenario registry: named sweeps over the batched engine.
+
+A :class:`Scenario` is a list of :class:`Grid` specs. Each Grid maps to ONE
+``bench.run_grid`` call — one flow set, one compile, every (vector size x
+profile x baseline/congested) cell batched under ``jax.vmap``. The paper's
+Fig. 5/6/7-8 sweeps are registered here, plus new congestion families the
+host-callback engine could not express (ramp onsets, random telegraph
+aggressors, multi-tenant envelope mixes).
+
+Adding a sweep: write a builder returning a Scenario, decorate it with
+``@register``, and run it with ``run_scenario(get("name"))`` (or wire it to
+a benchmarks/ driver; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterator, List, Tuple
+
+from repro.core import bench
+from repro.core import congestion as cong
+from repro.core.envelopes import Profile
+from repro.core.fabric import systems
+
+KiB = 2 ** 10
+MiB = 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """One flow-set's worth of cells: sizes x profiles (plus the implied
+    per-size baselines), vmapped by bench.run_grid."""
+
+    system: str
+    n_nodes: int
+    aggressor: str
+    sizes: Tuple[float, ...]
+    profiles: Tuple[Profile, ...]
+    victim: str = "ring_allgather"
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    grids: Tuple[Grid, ...]
+    n_iters: int = 25
+    warmup: int = 5
+    # microbenchmark scenarios (wall-clock collective timing) carry their
+    # payload sizes here instead of fabric grids
+    microbench_sizes: Tuple[int, ...] = ()
+
+
+SCENARIOS: Dict[str, Callable[[bool], Scenario]] = {}
+
+
+def register(builder: Callable[[bool], Scenario]):
+    probe = builder(False)
+    SCENARIOS[probe.name] = builder
+    return builder
+
+
+def get(name: str, quick: bool = False) -> Scenario:
+    return SCENARIOS[name](quick)
+
+
+def run_grid_spec(scenario: Scenario, grid: Grid) -> List[bench.BenchResult]:
+    return bench.run_grid(
+        systems.get_system(grid.system), grid.n_nodes, grid.victim,
+        grid.aggressor, grid.sizes, grid.profiles,
+        n_iters=scenario.n_iters, warmup=scenario.warmup)
+
+
+def run_scenario(scenario: Scenario) -> Iterator[bench.BenchResult]:
+    """Run every grid of a scenario (each grid = one batched call)."""
+    for grid in scenario.grids:
+        yield from run_grid_spec(scenario, grid)
+
+
+def result_row(grid: Grid, r: bench.BenchResult) -> dict:
+    """Flatten a BenchResult to the CSV row shape the drivers print."""
+    row = {
+        "system": r.system, "n_nodes": r.n_nodes, "victim": r.victim,
+        "aggressor": r.aggressor, "vector_bytes": r.vector_bytes,
+        "profile": r.profile,
+        "ratio": round(r.ratio, 4),
+        "t_uncongested_us": round(r.t_uncongested_s * 1e6, 1),
+        "t_congested_us": round(r.t_congested_s * 1e6, 1),
+    }
+    prof = next((p for p in grid.profiles if p.label() == r.profile), None)
+    if prof is not None and prof.kind in ("bursty", "random"):
+        row["burst_ms"] = round(prof.burst_s * 1e3, 4)
+        row["pause_ms"] = round(prof.pause_s * 1e3, 4)
+    return row
+
+
+# --------------------------------------------------------------------------
+# Paper sweeps (Figs. 5-8)
+# --------------------------------------------------------------------------
+
+FIG5_SYSTEMS = ("cresco8", "leonardo", "lumi")
+FIG5_AGGRESSORS = ("alltoall", "incast")
+FIG5_NODES = (16, 32, 64, 128, 256)
+FIG5_SIZES = (512, 32 * KiB, 2 * MiB, 16 * MiB)
+
+BURSTS_MS = (0.5, 2.0, 8.0)
+PAUSES_MS = (0.2, 1.0, 8.0)
+FIG6_SIZES = (512, 32 * KiB, 2 * MiB)
+
+
+def _bursty_grid(bursts_ms, pauses_ms) -> Tuple[Profile, ...]:
+    return tuple(cong.bursty(b * 1e-3, p * 1e-3)
+                 for b in bursts_ms for p in pauses_ms)
+
+
+@register
+def fig5_steady(quick: bool = False) -> Scenario:
+    nodes = (16, 64, 256) if quick else FIG5_NODES
+    sizes = (32 * KiB, 2 * MiB) if quick else FIG5_SIZES
+    grids = tuple(Grid(s, n, a, sizes, (cong.steady(),))
+                  for s in FIG5_SYSTEMS for a in FIG5_AGGRESSORS
+                  for n in nodes)
+    return Scenario(
+        "fig5_steady",
+        "Paper Fig. 5 / Obs. 2: steady congestion at scale — ratio heatmaps "
+        "(nodes x vector size) per system x aggressor, AllGather victim.",
+        grids)
+
+
+@register
+def fig6_bursty(quick: bool = False) -> Scenario:
+    sizes = (32 * KiB,) if quick else FIG6_SIZES
+    bursts = (0.5, 8.0) if quick else BURSTS_MS
+    pauses = (0.2, 8.0) if quick else PAUSES_MS
+    grids = tuple(Grid(s, 64, a, sizes, _bursty_grid(bursts, pauses))
+                  for s in FIG5_SYSTEMS for a in FIG5_AGGRESSORS)
+    return Scenario(
+        "fig6_bursty",
+        "Paper Fig. 6 / Obs. 3: bursty congestion at 64 nodes — "
+        "(burst x pause) duty-cycle heatmaps per system x aggressor x size.",
+        grids)
+
+
+@register
+def fig7_fig8_scale(quick: bool = False) -> Scenario:
+    cells = (("cresco8", 64), ("cresco8", 128), ("lumi", 256))
+    sizes = (2 * MiB,) if quick else (32 * KiB, 2 * MiB)
+    bursts = (2.0,) if quick else BURSTS_MS
+    pauses = (0.2, 8.0) if quick else PAUSES_MS
+    grids = tuple(Grid(s, n, a, sizes, _bursty_grid(bursts, pauses))
+                  for (s, n) in cells for a in FIG5_AGGRESSORS)
+    return Scenario(
+        "fig7_fig8_scale",
+        "Paper Figs. 7-8: bursty congestion at larger scale (CRESCO8 "
+        "64/128 nodes, LUMI 256 nodes).",
+        grids, n_iters=20, warmup=4)
+
+
+@register
+def collective_microbench(quick: bool = False) -> Scenario:
+    return Scenario(
+        "collective_microbench",
+        "§III-B: wall-clock cost of the custom collective schedules on an "
+        "8-device host mesh (benchmarks/collective_bench.py).",
+        grids=(), microbench_sizes=(32 * KiB, 2 * MiB))
+
+
+# --------------------------------------------------------------------------
+# Beyond-paper scenario families (traceable-envelope shapes)
+# --------------------------------------------------------------------------
+
+
+@register
+def ramp_onset(quick: bool = False) -> Scenario:
+    """Congestion onset: aggressors ramp from idle to full blast. Probes
+    how fast each fabric's CC walks victims down as pressure builds —
+    square-wave profiles only show the endpoints."""
+    ramps = (cong.ramp(1e-3), cong.ramp(8e-3), cong.ramp(32e-3),
+             cong.steady())
+    sysnames = ("leonardo", "lumi") if quick else FIG5_SYSTEMS
+    sizes = (2 * MiB,) if quick else (32 * KiB, 2 * MiB)
+    grids = tuple(Grid(s, 32, a, sizes, ramps)
+                  for s in sysnames for a in ("incast",))
+    return Scenario(
+        "ramp_onset",
+        "Aggressor intensity ramps 0 -> 1 over 1/8/32 ms (vs steady): "
+        "congestion-onset response per fabric.",
+        grids)
+
+
+@register
+def random_telegraph(quick: bool = False) -> Scenario:
+    """Irregular bursts with the same mean duty cycle as Fig. 6's periodic
+    ones: compares periodic vs random arrival of congestion (production
+    background traffic is not a square wave)."""
+    pairs = ((2.0, 0.2), (2.0, 8.0)) if quick else \
+        ((0.5, 0.2), (2.0, 0.2), (2.0, 8.0), (8.0, 8.0))
+    profiles = []
+    for b, p in pairs:
+        profiles.append(cong.bursty(b * 1e-3, p * 1e-3))
+        profiles.append(cong.random_onoff(b * 1e-3, p * 1e-3, seed=1))
+    sysnames = ("cresco8", "leonardo") if quick else FIG5_SYSTEMS
+    grids = tuple(Grid(s, 32, "incast", (2 * MiB,), tuple(profiles))
+                  for s in sysnames)
+    return Scenario(
+        "random_telegraph",
+        "Periodic vs random on/off aggressors at matched duty cycles.",
+        grids)
+
+
+@register
+def multi_tenant(quick: bool = False) -> Scenario:
+    """Several aggressor tenants with different burst periods share the
+    aggressor nodes; their envelopes blend into a fractional intensity.
+    The blend's duty cycle matches a single mid-period tenant, isolating
+    the effect of overlapping, desynchronized tenants."""
+    tenants = cong.multi_tenant(
+        (cong.bursty(0.5e-3, 0.5e-3), 1 / 3),
+        (cong.bursty(2e-3, 2e-3), 1 / 3),
+        (cong.random_onoff(4e-3, 4e-3, seed=3), 1 / 3))
+    profiles = (tenants, cong.bursty(2e-3, 2e-3), cong.steady())
+    sysnames = ("leonardo", "lumi") if quick else FIG5_SYSTEMS
+    grids = tuple(Grid(s, 32, a, (2 * MiB,), profiles)
+                  for s in sysnames for a in ("alltoall", "incast"))
+    return Scenario(
+        "multi_tenant",
+        "Three desynchronized tenant envelopes blended at 1/3 weight each "
+        "vs a single 50%-duty tenant vs steady.",
+        grids)

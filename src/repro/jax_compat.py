@@ -1,0 +1,37 @@
+"""Polyfills bridging jax 0.4.x and the 0.5+/0.6 APIs the codebase uses.
+
+Imported from ``repro/__init__.py`` so any entry point (tests, benchmarks,
+subprocess scripts) gets the shims as soon as a ``repro`` module loads.
+Newer jax versions are left untouched.
+
+* ``jax.shard_map``  — moved out of ``jax.experimental.shard_map`` in 0.5;
+  the keyword ``check_rep`` was renamed ``check_vma``.
+* ``jax.set_mesh``   — 0.6 context manager; on 0.4.x a ``Mesh`` is itself
+  the context manager that installs the physical mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, **kw):
+            if check_vma is not None:
+                kw["check_rep"] = check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+        def set_mesh(mesh):
+            return mesh  # Mesh.__enter__ installs it (0.4.x semantics)
+
+        jax.set_mesh = set_mesh
+
+
+install()

@@ -7,24 +7,34 @@ importing this module never touches jax device state — the dry-run sets
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on mesh construction
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: meshes are implicitly Auto
+    AxisType = None
 
 from repro.models.layers import AxisRules
+
+
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 0, model: int = 1):
     """Mesh over whatever devices exist (tests / examples / smoke runs)."""
     n = len(jax.devices())
     data = data or max(1, n // model)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def rules_for(cfg, mesh) -> AxisRules:

@@ -1,0 +1,152 @@
+"""Batched-engine tests: run_grid/vmap vs per-cell equivalence, envelope
+fixed points and duty cycles, CC-kind-as-data dispatch, dt quantization."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bench, congestion as cong, envelopes as env_lib
+from repro.core.fabric import simulator as sim_lib, systems
+
+
+# --------------------------------------------------------------------------
+# vmapped grid == sequential per-cell within tolerance
+# --------------------------------------------------------------------------
+
+def test_run_grid_matches_run_point():
+    sysp = systems.get_system("nanjing_ecmp")
+    sizes = [1 << 20, 8 << 20]
+    profiles = [cong.steady(), cong.bursty(1e-3, 1e-3)]
+    grid = bench.run_grid(sysp, 8, "alltoall", "alltoall", sizes, profiles,
+                          n_iters=12, warmup=3)
+    assert len(grid) == len(sizes) * len(profiles)
+    by_label = {p.label(): p for p in profiles}
+    for r in grid:
+        pt = bench.run_point(sysp, 8, "alltoall", "alltoall", r.vector_bytes,
+                             by_label[r.profile], n_iters=12, warmup=3)
+        assert np.isclose(r.t_uncongested_s, pt.t_uncongested_s, rtol=0.02), \
+            (r.profile, r.vector_bytes, r.t_uncongested_s, pt.t_uncongested_s)
+        assert np.isclose(r.t_congested_s, pt.t_congested_s, rtol=0.02), \
+            (r.profile, r.vector_bytes, r.t_congested_s, pt.t_congested_s)
+        assert np.isclose(r.ratio, pt.ratio, rtol=0.03)
+
+
+def test_grid_baseline_shared_across_profiles():
+    """All cells of one vector size report the same uncongested time."""
+    sysp = systems.get_system("lumi")
+    grid = bench.run_grid(sysp, 16, "ring_allgather", "incast", [2 << 20],
+                          [cong.steady(), cong.bursty(2e-3, 2e-3)],
+                          n_iters=10, warmup=2)
+    t_u = {r.t_uncongested_s for r in grid}
+    assert len(t_u) == 1
+
+
+# --------------------------------------------------------------------------
+# envelopes: fixed points, duty cycles, traceable == host mirror
+# --------------------------------------------------------------------------
+
+def test_off_steady_fixed_points():
+    t = np.linspace(0.0, 1.0, 5000)
+    assert (env_lib.envelope_np(cong.no_congestion().params(), t) == 0).all()
+    assert (env_lib.envelope_np(cong.steady().params(), t) == 1).all()
+    # traceable path agrees at sampled times
+    for prof, want in ((cong.no_congestion(), 0.0), (cong.steady(), 1.0)):
+        env = jnp.asarray(prof.params())
+        for tv in (0.0, 1e-4, 0.37):
+            assert float(env_lib.envelope_at(env, jnp.float32(tv))) == want
+
+
+@pytest.mark.parametrize("burst,pause", [(2e-3, 1e-3), (0.5e-3, 8e-3),
+                                         (8e-3, 0.2e-3)])
+def test_parameterized_duty_cycles(burst, pause):
+    """Mean envelope ~= burst/(burst+pause) for periodic AND random
+    profiles with the same nominal duty cycle."""
+    want = burst / (burst + pause)
+    n, dt = 400_000, (burst + pause) / 400.0
+    for prof in (cong.bursty(burst, pause),
+                 cong.random_onoff(burst, pause, seed=2)):
+        duty = prof.envelope(0.0, n, dt).mean()
+        assert abs(duty - want) < 0.04, (prof.label(), duty, want)
+
+
+def test_envelope_traceable_matches_host():
+    prof = cong.bursty(1.7e-3, 0.9e-3)
+    env = jnp.asarray(prof.params())
+    ts = np.linspace(0.0, 0.05, 301).astype(np.float32)
+    host = env_lib.envelope_np(prof.params(), ts)
+    traced = np.array([float(env_lib.envelope_at(env, jnp.float32(t)))
+                       for t in ts])
+    assert (host == traced).mean() > 0.99  # float32 period-edge wiggle only
+
+
+def test_multi_tenant_mix_blends():
+    mix = cong.multi_tenant((cong.steady(), 0.25),
+                            (cong.bursty(1e-3, 1e-3), 0.5))
+    vals = env_lib.envelope_np(mix.params(), np.linspace(0, 0.1, 20_000))
+    assert vals.min() >= 0.0 and vals.max() <= 1.0
+    assert 0.25 <= vals.mean() <= 0.75  # 0.25 base + 0.5 * ~50% duty
+    assert set(np.round(np.unique(vals), 4)) == {0.25, 0.75}
+
+
+def test_mix_component_overflow_raises():
+    parts = tuple((cong.bursty(1e-3, 1e-3), 0.2)
+                  for _ in range(env_lib.ENV_COMPONENTS + 1))
+    with pytest.raises(ValueError):
+        cong.multi_tenant(*parts).params()
+
+
+# --------------------------------------------------------------------------
+# CC kind is data: heterogeneous kinds batch in one vmapped call
+# --------------------------------------------------------------------------
+
+def test_mixed_cc_kinds_batch():
+    from repro.core.fabric import cc as cc_lib
+
+    sysp = systems.get_system("haicgu_ib")
+    case = bench.build_case(sysp, 8, "ring_allgather", "incast")
+    v, dt = 4 << 20, 4e-6
+    ccs = [cc_lib.dcqcn(), cc_lib.infiniband("edr"), cc_lib.slingshot(),
+           cc_lib.ai_ecn()]
+    params = [sim_lib.make_params(
+        c, dt=dt,
+        bytes_per_iter=np.where(case.is_victim, case.unit_bytes * v, 1e30),
+        host_caps=case.host_caps, env=cong.steady().params()) for c in ccs]
+    batched = sim_lib.run_cells(case.geom, sim_lib.stack_params(params),
+                                jnp.asarray(8, jnp.int32),
+                                chunk=512, max_chunks=40, stride=8)
+    for i, p in enumerate(params):
+        single = sim_lib.run_cell(case.geom, p, jnp.asarray(8, jnp.int32),
+                                  chunk=512, max_chunks=40, stride=8)
+        res_b = sim_lib.summarize(batched, n_iters=8, warmup=2, dt=dt,
+                                  chunk=512, stride=8, cell=i)
+        res_s = sim_lib.summarize(single, n_iters=8, warmup=2, dt=dt,
+                                  chunk=512, stride=8)
+        assert res_b.n_done == res_s.n_done
+        assert np.allclose(res_b.iter_times, res_s.iter_times, rtol=1e-4), \
+            ccs[i].kind
+    # distinct CC kinds must actually behave differently under incast
+    times = [sim_lib.summarize(batched, n_iters=8, warmup=2, dt=dt,
+                               chunk=512, stride=8, cell=i).iter_times.mean()
+             for i in range(len(ccs))]
+    assert len({round(float(t), 8) for t in times}) > 1
+
+
+# --------------------------------------------------------------------------
+# dt ladder
+# --------------------------------------------------------------------------
+
+def test_quantize_dt_ladder():
+    for raw, want in ((1e-6, 1e-6), (3.1e-6, 2e-6), (200e-6, 128e-6),
+                      (0.3e-6, 1e-6)):
+        assert bench.quantize_dt(raw) == want
+    # quantization never coarsens beyond the raw estimate (except the floor)
+    for raw in np.geomspace(1e-6, 2e-4, 40):
+        q = bench.quantize_dt(float(raw))
+        assert q in bench.DT_LADDER_S
+        assert q <= raw or q == bench.DT_LADDER_S[0]
+
+
+def test_straggler_param():
+    out = bench.straggler_impact(systems.get_system("haicgu_ib"), 8,
+                                 "ring_allgather", 4 << 20, slow_factor=0.2,
+                                 n_iters=10, straggler=0)
+    assert out["slowdown"] > 2.0

@@ -59,8 +59,8 @@ from repro.launch.mesh import rules_for
 from repro.models.api import build_model
 
 report = {}
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 
 def loss_of(arch, **kw):
     cfg = dataclasses.replace(get_config(arch).reduced(),
