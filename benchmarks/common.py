@@ -17,6 +17,10 @@ def _load_cache(name: str, keys: List[str],
     if os.path.exists(path) and not force:
         with open(path) as f:
             for row in csv.DictReader(f):
+                # rows from an older cache layout (missing a key column)
+                # are treated as misses and recomputed
+                if any(row.get(k) in (None, "") for k in keys):
+                    continue
                 cache[tuple(row[k] for k in keys)] = row
     return path, cache
 
@@ -41,7 +45,15 @@ def cached_sweep(name: str, keys: List[str], points: Iterable[tuple],
     return rows
 
 
-SCENARIO_KEYS = ["system", "n_nodes", "aggressor", "vector_bytes", "profile"]
+SCENARIO_KEYS = ["system", "n_nodes", "victim", "aggressor", "vector_bytes",
+                 "profile"]
+
+
+def _grid_victim_label(grid) -> str:
+    from repro.core import bench
+
+    return bench.resolve_victim_label(grid.victim, grid.phased,
+                                      list(grid.jobs) or None)
 
 
 def scenario_rows(scenario, force: bool = False) -> List[Dict]:
@@ -54,6 +66,7 @@ def scenario_rows(scenario, force: bool = False) -> List[Dict]:
     rows = []
     for grid in scenario.grids:
         expected = [(grid.system, str(grid.n_nodes),
+                     _grid_victim_label(grid),
                      grid.aggressor or "none", str(float(v)), p.label())
                     for v in grid.sizes for p in grid.profiles]
         if all(k in cache for k in expected):

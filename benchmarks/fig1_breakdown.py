@@ -75,10 +75,11 @@ def run_size(vector_bytes: float) -> dict:
     }
 
 
-def main(force: bool = False):
-    sizes = [2 ** 20, 16 * 2 ** 20, 128 * 2 ** 20]
+def main(force: bool = False, quick: bool = False):
+    from repro.core import scenarios
+    points = scenarios.get("fig1_breakdown", quick).points
     rows = cached_sweep("fig1_breakdown", ["vector_bytes"],
-                        [(s,) for s in sizes], run_size, force=force)
+                        list(points), run_size, force=force)
     print("\n# Fig. 1 — ring AllReduce cost breakdown "
           f"({N_NODES} nodes, EDR sim + on-device compute)")
     print(f"{'size':>8} {'reduce_us':>11} {'memcpy_us':>11} "

@@ -35,9 +35,9 @@ def run_point(system: str, vector_bytes: float) -> dict:
     }
 
 
-def main(force: bool = False):
-    sizes = [16 * 2 ** 20, 128 * 2 ** 20]
-    points = [(s, v) for s in SYSTEMS for v in sizes]
+def main(force: bool = False, quick: bool = False):
+    from repro.core import scenarios
+    points = list(scenarios.get("fig3_sawtooth", quick).points)
     rows = cached_sweep("fig3_sawtooth", ["system", "vector_bytes"], points,
                         run_point, force=force)
     print("\n# Fig. 3 — self-congestion stability, 4-node AllGather")

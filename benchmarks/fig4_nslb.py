@@ -20,9 +20,9 @@ def run_point(mode: str, vector_bytes: float) -> dict:
     }
 
 
-def main(force: bool = False):
-    sizes = [2 ** 20, 4 * 2 ** 20, 16 * 2 ** 20, 64 * 2 ** 20]
-    points = [(m, s) for m in ("nslb", "ecmp") for s in sizes]
+def main(force: bool = False, quick: bool = False):
+    from repro.core import scenarios
+    points = list(scenarios.get("fig4_nslb", quick).points)
     rows = cached_sweep("fig4_nslb", ["mode", "vector_bytes"], points,
                         run_point, force=force)
     print("\n# Fig. 4 — NSLB under steady AlltoAll congestion (4+4 nodes)")

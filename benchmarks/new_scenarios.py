@@ -1,6 +1,8 @@
-"""Beyond-paper congestion families enabled by traceable envelopes:
-ramp onsets, random telegraph aggressors, and multi-tenant envelope mixes
-(scenario registry: ramp_onset / random_telegraph / multi_tenant)."""
+"""Beyond-paper congestion families enabled by traceable envelopes and
+the traffic-program IR: ramp onsets, random telegraph aggressors,
+multi-tenant envelope mixes, phased vs flattened collective schedules,
+and concurrent multi-job interference (scenario registry: ramp_onset /
+random_telegraph / multi_tenant / phased_collectives / multi_job_mix)."""
 from __future__ import annotations
 
 import argparse
@@ -8,28 +10,47 @@ import argparse
 from benchmarks.common import scenario_rows, size_label
 from repro.core import scenarios
 
-FAMILIES = ("ramp_onset", "random_telegraph", "multi_tenant")
+FAMILIES = ("ramp_onset", "random_telegraph", "multi_tenant",
+            "phased_collectives", "multi_job_mix")
 
 
-def main(force: bool = False, quick: bool = False):
+def main(force: bool = False, quick: bool = False, families=FAMILIES):
     all_rows = []
-    for name in FAMILIES:
+    for name in families:
         scen = scenarios.get(name, quick)
         rows = scenario_rows(scen, force=force)
         all_rows.extend(rows)
         print(f"\n# {name} — {scen.description}")
-        print(f"{'system':>10} {'aggr':>9} {'size':>8} "
-              f"{'profile':>34} {'ratio':>7}")
+        print(f"{'system':>10} {'victim':>22} {'aggr':>20} {'size':>8} "
+              f"{'profile':>22} {'ratio':>7}")
         for r in rows:
-            print(f"{r['system']:>10} {r['aggressor']:>9} "
+            print(f"{r['system']:>10} {r.get('victim', ''):>22} "
+                  f"{r['aggressor']:>20} "
                   f"{size_label(r['vector_bytes']):>8} "
-                  f"{r['profile']:>34} {float(r['ratio']):>7.3f}")
+                  f"{r['profile']:>22} {float(r['ratio']):>7.3f}"
+                  + (f"  [{r['job_times']}]"
+                     if name == "multi_job_mix" and r.get("job_times")
+                     else ""))
     # sanity narratives
     ramp = [r for r in all_rows if r["profile"].startswith("ramp")]
     if ramp:
         worst = min(float(r["ratio"]) for r in ramp)
         print(f"\n# ramp check: slowest-onset ratio floor {worst:.2f} "
               "(ramps bound steady-state impact from above)")
+    phased = [r for r in all_rows if r.get("victim", "").endswith("+phased")]
+    if phased:
+        flat = {(r["system"], r["victim"], r["aggressor"],
+                 r["vector_bytes"], r["profile"]): float(r["ratio"])
+                for r in all_rows
+                if "+phased" not in r.get("victim", "")}
+        deltas = [float(r["ratio"]) - flat[k] for r in phased
+                  if (k := (r["system"], r["victim"][:-len("+phased")],
+                            r["aggressor"], r["vector_bytes"],
+                            r["profile"])) in flat]
+        if deltas:
+            print(f"# phased check: phased-vs-flat ratio delta "
+                  f"min {min(deltas):+.2f} max {max(deltas):+.2f} over "
+                  f"{len(deltas)} paired cells (temporal structure matters)")
     return all_rows
 
 
@@ -37,5 +58,8 @@ if __name__ == "__main__":
     p = argparse.ArgumentParser()
     p.add_argument("--force", action="store_true")
     p.add_argument("--quick", action="store_true")
+    p.add_argument("--family", default="",
+                   help="comma-separated subset of scenario families")
     a = p.parse_args()
-    main(force=a.force, quick=a.quick)
+    fams = tuple(f for f in a.family.split(",") if f) or FAMILIES
+    main(force=a.force, quick=a.quick, families=fams)

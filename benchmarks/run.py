@@ -28,9 +28,11 @@ def main() -> None:
                             fig7_fig8_scale, new_scenarios)
 
     benches = {
-        "fig1": lambda: fig1_breakdown.main(force=args.force),
-        "fig3": lambda: fig3_sawtooth.main(force=args.force),
-        "fig4": lambda: fig4_nslb.main(force=args.force),
+        "fig1": lambda: fig1_breakdown.main(force=args.force,
+                                            quick=args.quick),
+        "fig3": lambda: fig3_sawtooth.main(force=args.force,
+                                           quick=args.quick),
+        "fig4": lambda: fig4_nslb.main(force=args.force, quick=args.quick),
         "fig5": lambda: fig5_steady.main(force=args.force, quick=args.quick),
         "fig6": lambda: fig6_bursty.main(force=args.force, quick=args.quick),
         "fig7_fig8": lambda: fig7_fig8_scale.main(force=args.force,

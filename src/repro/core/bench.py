@@ -25,10 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import congestion as cong
-from repro.core.fabric.simulator import (FabricGeometry, SimParams,
-                                         check_iter_budget, make_geometry,
-                                         make_params, run_cell, run_cells,
-                                         stack_params, summarize)
+from repro.core import traffic
+from repro.core.fabric.simulator import (TDONE_SLOTS, FabricGeometry,
+                                         SimParams, check_iter_budget,
+                                         make_geometry, make_params,
+                                         run_cell, run_cells, stack_params,
+                                         summarize)
 from repro.core.fabric.systems import SystemPreset
 
 
@@ -45,6 +47,27 @@ class BenchResult:
     ratio: float  # uncongested / congested (paper Fig. 5-8; higher = better)
     victim_goodput_gbps: float
     n_iters: tuple
+    # per-job mean iteration times of the congested cell, for multi-job
+    # mixes: ((job_name, t_mean_s, n_done), ...) over jobs that closed
+    # at least one program iteration
+    job_times: tuple = ()
+
+
+def victim_label(victim_coll: str, phased: bool) -> str:
+    """The reported/cached victim column: the collective kind plus a
+    '+phased' marker when the primary job runs its step schedule. The
+    single source of truth for result rows AND scenario cache keys."""
+    return victim_coll + ("+phased" if phased else "")
+
+
+def resolve_victim_label(victim_coll: str, phased: bool, jobs=None) -> str:
+    """Victim label as build_case resolves it for a (victim, phased,
+    jobs) request — scenario cache keys (benchmarks.common) call this so
+    the key and the cached row cannot drift apart."""
+    if jobs:
+        return victim_label(victim_coll or jobs[0].collective,
+                            bool(jobs[0].phased))
+    return victim_label(victim_coll, phased)
 
 
 def _mean_iter_time(res, lat: float) -> float:
@@ -95,11 +118,16 @@ def quantize_dt(dt_raw: float) -> float:
     return DT_LADDER_S[0]
 
 
-def choose_dt(topo, n_victims: int, vector_bytes: float, lat: float) -> float:
-    """dt sized so one uncongested iteration spans ~100 steps."""
+def choose_dt(topo, n_victims: int, vector_bytes: float, lat: float,
+              n_phases: int = 1) -> float:
+    """dt sized so one uncongested iteration spans ~100 steps — and, for
+    phased programs, so each of the ``n_phases`` barrier-gated phases
+    spans at least ~8 steps (phase advance is quantized to dt, so a
+    too-coarse dt would inflate every phase by up to one step)."""
     per_flow = vector_bytes / max(n_victims, 1)
     t_est = max(per_flow / (topo.caps.max()), 2e-6) * 2 + lat
-    return quantize_dt(float(np.clip(t_est / 100.0, 1e-6, 200e-6)))
+    steps = max(100, 8 * int(n_phases))
+    return quantize_dt(float(np.clip(t_est / steps, 1e-6, 200e-6)))
 
 
 # --------------------------------------------------------------------------
@@ -109,9 +137,10 @@ def choose_dt(topo, n_victims: int, vector_bytes: float, lat: float) -> float:
 
 @dataclasses.dataclass
 class GridCase:
-    """One (system, allocation, victim/aggressor collective) experiment;
-    the unit-vector flow set to be scaled per cell (victim bytes are linear
-    in the swept vector size)."""
+    """One (system, allocation, traffic program) experiment; the
+    unit-vector flow program to be scaled per cell (sweeping jobs' bytes
+    are linear in the swept vector size; background jobs keep their own
+    fixed volume)."""
 
     system: SystemPreset
     n_nodes: int
@@ -123,11 +152,21 @@ class GridCase:
     is_victim: np.ndarray  # (F,)
     host_caps: np.ndarray  # (F,)
     n_victims: int
+    sweep_mask: np.ndarray = None  # (F,) flows whose bytes sweep
+    job_names: List[str] = None
+    max_phases: int = 1
+    primary_phased: bool = False  # job 0 runs a phased step schedule
+
+    def __post_init__(self):
+        if self.sweep_mask is None:
+            self.sweep_mask = np.asarray(self.is_victim, bool)
+        if self.job_names is None:
+            self.job_names = ["victim", "aggressor"]
 
     def cell_params(self, vector_bytes: float, profile: cong.Profile,
                     dt: float) -> SimParams:
-        bpi = np.where(self.is_victim, self.unit_bytes * vector_bytes,
-                       cong.AGGRESSOR_BYTES)
+        bpi = np.where(self.sweep_mask, self.unit_bytes * vector_bytes,
+                       self.unit_bytes)
         return make_params(self.system.cc, dt=dt, bytes_per_iter=bpi,
                            host_caps=self.host_caps, env=profile.params())
 
@@ -137,26 +176,56 @@ class GridCase:
 
 def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
                aggr_coll: str, topo=None,
-               nodes: Optional[np.ndarray] = None) -> GridCase:
-    """Build the flow set + geometry once for a whole grid of cells."""
+               nodes: Optional[np.ndarray] = None, *,
+               phased: bool = False,
+               jobs: Optional[Sequence[traffic.JobSpec]] = None) -> GridCase:
+    """Build the flow program + geometry once for a whole grid of cells.
+
+    Default: the paper's two-job victim/aggressor split. ``phased=True``
+    lowers the victim's step schedule instead of flattening it.
+    ``jobs`` replaces the split with an explicit multi-job program — jobs
+    without nodes get an interleaved share of the allocation, and jobs
+    with ``sweep_bytes`` are compiled at unit vector size and scaled per
+    cell.
+    """
     if topo is None:
         topo = machine_topology(system)
     if nodes is None:
         nodes = allocate(system, n_nodes)
-    # the paper's §III-A interleaved split (applied even with no aggressor
-    # collective, so baseline and congested cells share the victim set)
-    vidx, aidx = cong.interleaved_split(n_nodes)
-    victims, aggressors = nodes[vidx], nodes[aidx]
-    flows = cong.build_flowset(topo, victims, aggressors, victim_coll,
-                               aggr_coll, 1.0,
-                               routing_mode=system.static_routing,
-                               k_max=system.k_max)
+    if jobs is not None:
+        jobs = traffic.split_nodes(nodes, list(jobs))
+        jobs = [dataclasses.replace(j, vector_bytes=1.0)
+                if j.sweep_bytes and not j.endless else j for j in jobs]
+        flows = cong.build_program_flowset(
+            topo, jobs, routing_mode=system.static_routing,
+            k_max=system.k_max)
+        # caller-provided labels win (scenario cache keys); fall back to
+        # the program's own names
+        victim_coll = victim_coll or jobs[0].collective
+        aggr_coll = aggr_coll or "+".join(j.name for j in jobs[1:])
+        n_victims = len(jobs[0].nodes)
+    else:
+        # the paper's §III-A interleaved split (applied even with no
+        # aggressor collective, so baseline and congested cells share
+        # the victim set)
+        vidx, aidx = cong.interleaved_split(n_nodes)
+        victims, aggressors = nodes[vidx], nodes[aidx]
+        flows = cong.build_flowset(topo, victims, aggressors, victim_coll,
+                                   aggr_coll, 1.0,
+                                   routing_mode=system.static_routing,
+                                   k_max=system.k_max, phased=phased)
+        n_victims = len(victims)
     geom = make_geometry(topo, flows, routing=system.routing)
     return GridCase(system=system, n_nodes=n_nodes, victim_coll=victim_coll,
                     aggr_coll=aggr_coll, topo=topo, geom=geom,
                     unit_bytes=flows.bytes_per_iter.copy(),
                     is_victim=flows.is_victim, host_caps=flows.host_caps,
-                    n_victims=len(victims))
+                    n_victims=n_victims,
+                    sweep_mask=np.asarray(flows.sweep_mask, bool),
+                    job_names=list(flows.job_names),
+                    max_phases=int(np.max(flows.n_phases)),
+                    primary_phased=bool(jobs[0].phased) if jobs is not None
+                    else phased)
 
 
 # --------------------------------------------------------------------------
@@ -164,24 +233,50 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
 # --------------------------------------------------------------------------
 
 
+def _job_times(out, case: GridCase, *, n_iters, warmup, cell) -> tuple:
+    """Per-job mean iteration times of one cell (jobs that closed at
+    least one program iteration; endless aggressors never do). Reads
+    only the tiny it/t_done outputs — no trace-buffer transfer."""
+    it = np.asarray(out["it"])
+    td = np.asarray(out["t_done"])
+    if cell is not None:
+        it, td = it[cell], td[cell]
+    rows = []
+    for ji, name in enumerate(case.job_names):
+        n_done = min(int(it[ji]), n_iters, TDONE_SLOTS)
+        if n_done <= 0:
+            continue
+        times = np.diff(np.concatenate([[0.0], td[ji][:n_done]]))
+        times = times[warmup:] if n_done > warmup else times
+        if len(times):
+            rows.append((name, float(np.mean(times)), n_done))
+    return tuple(rows)
+
+
 def run_grid(system: SystemPreset, n_nodes: int, victim_coll: str,
              aggr_coll: str, sizes: Sequence[float],
              profiles: Sequence[cong.Profile], *, n_iters: int = 60,
              warmup: int = 10, dt: Optional[float] = None,
              max_steps: int = 200_000, chunk: int = 2048,
-             trace_stride: int = 8) -> List[BenchResult]:
+             trace_stride: int = 8, phased: bool = False,
+             jobs: Optional[Sequence[traffic.JobSpec]] = None,
+             ) -> List[BenchResult]:
     """All (vector size x profile) cells of one experiment in a single
-    batched call: a per-size baseline (aggressors off) plus one congested
-    cell per profile, sharing one FlowSet/geometry and one compile."""
+    batched call: a per-size baseline (aggressors/background jobs off)
+    plus one congested cell per profile, sharing one FlowSet/geometry and
+    one compile. ``phased``/``jobs`` select the traffic program (see
+    build_case); per-job iteration times ride along in each result."""
     check_iter_budget(n_iters)
-    case = build_case(system, n_nodes, victim_coll, aggr_coll)
+    case = build_case(system, n_nodes, victim_coll, aggr_coll,
+                      phased=phased, jobs=jobs)
     lat = case.lat()
 
     cells: List[Tuple[float, cong.Profile]] = []
     dts: List[float] = []
     for v in sizes:
         cell_dt = dt if dt is not None else choose_dt(
-            case.topo, case.n_victims, float(v), lat)
+            case.topo, case.n_victims, float(v), lat,
+            n_phases=case.max_phases)
         for prof in [cong.no_congestion()] + list(profiles):
             cells.append((float(v), prof))
             dts.append(cell_dt)
@@ -205,8 +300,9 @@ def run_grid(system: SystemPreset, n_nodes: int, victim_coll: str,
                             chunk=chunk, stride=trace_stride, cell=ci)
             t_c = _mean_iter_time(res, lat)
             results.append(BenchResult(
-                system=system.name, n_nodes=n_nodes, victim=victim_coll,
-                aggressor=aggr_coll or "none", profile=prof.label(),
+                system=system.name, n_nodes=n_nodes,
+                victim=victim_label(case.victim_coll, case.primary_phased),
+                aggressor=case.aggr_coll or "none", profile=prof.label(),
                 vector_bytes=float(v), t_uncongested_s=t_u,
                 t_congested_s=t_c,
                 ratio=t_u / t_c if t_c > 0 else 0.0,
@@ -214,6 +310,8 @@ def run_grid(system: SystemPreset, n_nodes: int, victim_coll: str,
                     np.mean(res.victim_rate_trace[-200:]) * 8 / 1e9)
                 if len(res.victim_rate_trace) else 0.0,
                 n_iters=(base.n_done, res.n_done),
+                job_times=_job_times(out, case, n_iters=n_iters,
+                                     warmup=warmup, cell=ci),
             ))
     return results
 
@@ -222,16 +320,19 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
               aggr_coll: str, vector_bytes: float,
               profile: cong.Profile, *, n_iters: int = 60, warmup: int = 10,
               dt: Optional[float] = None, max_steps: int = 200_000,
-              return_traces: bool = False):
+              return_traces: bool = False, phased: bool = False,
+              jobs: Optional[Sequence[traffic.JobSpec]] = None):
     """One heatmap cell: baseline (aggressors off) vs congested run.
 
     Implemented as a 2-cell grid (baseline + congested batched in one call).
     """
     check_iter_budget(n_iters)
-    case = build_case(system, n_nodes, victim_coll, aggr_coll)
+    case = build_case(system, n_nodes, victim_coll, aggr_coll,
+                      phased=phased, jobs=jobs)
     lat = case.lat()
     if dt is None:
-        dt = choose_dt(case.topo, case.n_victims, vector_bytes, lat)
+        dt = choose_dt(case.topo, case.n_victims, vector_bytes, lat,
+                       n_phases=case.max_phases)
     chunk, stride = 2048, 8
     max_chunks = -(-max_steps // chunk)
     params = stack_params([
@@ -246,14 +347,17 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
     t_u = _mean_iter_time(base, lat)
     t_c = _mean_iter_time(cong_res, lat)
     res = BenchResult(
-        system=system.name, n_nodes=n_nodes, victim=victim_coll,
-        aggressor=aggr_coll or "none", profile=profile.kind,
+        system=system.name, n_nodes=n_nodes,
+        victim=victim_label(case.victim_coll, case.primary_phased),
+        aggressor=case.aggr_coll or "none", profile=profile.kind,
         vector_bytes=vector_bytes, t_uncongested_s=t_u, t_congested_s=t_c,
         ratio=t_u / t_c if t_c > 0 else 0.0,
         victim_goodput_gbps=float(np.mean(cong_res.victim_rate_trace[-200:])
                                   * 8 / 1e9)
         if len(cong_res.victim_rate_trace) else 0.0,
         n_iters=(base.n_done, cong_res.n_done),
+        job_times=_job_times(out, case, n_iters=n_iters, warmup=warmup,
+                             cell=1),
     )
     if return_traces:
         return res, base, cong_res

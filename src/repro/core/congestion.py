@@ -1,4 +1,4 @@
-"""Congestion-injection harness (paper §III).
+"""Congestion-injection harness (paper §III) on the traffic-program IR.
 
 Implements the paper's methodology exactly:
   * interleaved victim/aggressor node split (§III-A): node 0 -> victims,
@@ -10,6 +10,12 @@ Implements the paper's methodology exactly:
     configurable (burst length, inter-burst pause) — the duty cycle —
     plus the extended traceable envelope families (ramp onset, random
     telegraph, multi-tenant mixes) defined in envelopes.py.
+
+Every experiment is a *program* of jobs (traffic.JobSpec): the paper's
+victim/aggressor setup is the two-job special case (a flattened victim
+plus an endless envelope-gated aggressor), and the same builder packs
+arbitrary multi-job mixes — phased collectives, two training tenants,
+N-tenant fair-share — into one FlowSet executed inside the jitted scan.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import traffic
 from repro.core.collectives import wire_bytes_model
 # Re-exported envelope layer (traceable profiles live in envelopes.py so
 # the simulator can import them without a cycle).
@@ -26,6 +33,7 @@ from repro.core.envelopes import (ENV_COMPONENTS, Profile, bursty,  # noqa: F401
 from repro.core.fabric.routing import assign_paths
 from repro.core.fabric.simulator import FlowSet, pack_paths
 from repro.core.fabric.topology import Topology
+from repro.core.traffic import JobSpec  # noqa: F401  (re-export)
 
 
 def interleaved_split(n_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -41,57 +49,34 @@ def interleaved_split(n_nodes: int) -> Tuple[np.ndarray, np.ndarray]:
 
 def collective_flows(nodes: Sequence[int], kind: str,
                      vector_bytes: float) -> List[Tuple[int, int, float]]:
-    """(src, dst, bytes_per_iteration) triples for one collective.
+    """(src, dst, bytes_per_iteration) triples for one flattened
+    collective (the traffic IR's single-phase lowering).
 
     Matches the paper's custom algorithms: ring AllGather (each rank streams
     (n-1)/n of the vector along the ring), linear AlltoAll (all pairs, V/n
     each), ring AllReduce (2x ring traffic), Incast (everyone -> one node).
     """
-    nodes = list(nodes)
-    n = len(nodes)
-    if n < 2:
-        return []
-    out = []
-    if kind == "ring_allgather":
-        per = vector_bytes * (n - 1) / n
-        for i in range(n):
-            out.append((nodes[i], nodes[(i + 1) % n], per))
-    elif kind == "ring_allreduce":
-        per = 2.0 * vector_bytes * (n - 1) / n
-        for i in range(n):
-            out.append((nodes[i], nodes[(i + 1) % n], per))
-    elif kind == "alltoall":
-        per = vector_bytes / n
-        for i in nodes:
-            for j in nodes:
-                if i != j:
-                    out.append((i, j, per))
-    elif kind == "incast":
-        root = nodes[0]
-        for i in nodes[1:]:
-            out.append((i, root, vector_bytes))
-    else:
-        raise KeyError(kind)
-    return out
+    return traffic._flat_flows(nodes, kind, vector_bytes)
 
 
-AGGRESSOR_BYTES = 1e30  # endless loop (paper §III-A)
+AGGRESSOR_BYTES = traffic.ENDLESS_BYTES  # endless loop (paper §III-A)
 
 
-def build_flowset(topo: Topology, victim_nodes, aggressor_nodes,
-                  victim_coll: str, aggr_coll: str, vector_bytes: float,
-                  routing_mode: str = "deterministic",
-                  k_max: int = 4, seed: int = 0) -> FlowSet:
-    vflows = collective_flows(victim_nodes, victim_coll, vector_bytes)
-    aflows = (collective_flows(aggressor_nodes, aggr_coll, 1.0)
-              if aggr_coll else [])
-    src_dst = [(s, d) for s, d, _ in vflows + aflows]
+def build_program_flowset(topo: Topology, jobs: Sequence[traffic.JobSpec],
+                          routing_mode: str = "deterministic",
+                          k_max: int = 4, seed: int = 0,
+                          validate: bool = True) -> FlowSet:
+    """Compile a multi-job traffic program and bind it to a topology:
+    per-flow paths, NIC caps, and the packed phase tables the simulator
+    executes. One FlowSet = one geometry = one JIT entry for every cell
+    of a sweep over this program."""
+    prog = traffic.compile_programs(jobs, validate=validate)
+    src_dst = [(int(s), int(d)) for s, d in zip(prog.src, prog.dst)]
     paths_per_flow = [topo.paths(s, d) for s, d in src_dst]
     sink = len(topo.caps)
     paths, n_paths, plen = pack_paths(paths_per_flow, sink, k_max)
-    is_victim = np.array([True] * len(vflows) + [False] * len(aflows))
-    bpi = np.array([b for _, _, b in vflows]
-                   + [AGGRESSOR_BYTES] * len(aflows), np.float64)
+    is_victim = ~prog.env_gated[prog.flow_job] if prog.n_flows \
+        else np.zeros((0,), bool)
     choice = assign_paths(routing_mode, src_dst, paths_per_flow,
                           len(topo.caps), seed)
     # injection-link capacity per flow (the host's NIC rate)
@@ -100,16 +85,35 @@ def build_flowset(topo: Topology, victim_nodes, aggressor_nodes,
          for p in paths_per_flow])
     src_id = np.array([s for s, _ in src_dst], np.int32)
     return FlowSet(paths=paths, n_paths=n_paths, path_len=plen,
-                   is_victim=is_victim, bytes_per_iter=bpi,
-                   fixed_choice=choice, host_caps=host_caps, src_id=src_id)
+                   is_victim=is_victim,
+                   bytes_per_iter=prog.bytes_per_phase,
+                   fixed_choice=choice, host_caps=host_caps, src_id=src_id,
+                   flow_job=prog.flow_job, flow_phase=prog.flow_phase,
+                   n_phases=prog.n_phases, phase_gap=prog.phase_gap,
+                   sweep_mask=prog.sweep_mask, job_names=prog.job_names())
+
+
+def build_flowset(topo: Topology, victim_nodes, aggressor_nodes,
+                  victim_coll: str, aggr_coll: str, vector_bytes: float,
+                  routing_mode: str = "deterministic",
+                  k_max: int = 4, seed: int = 0,
+                  phased: bool = False) -> FlowSet:
+    """The paper's two-job program: one victim collective (flattened by
+    default; ``phased=True`` lowers its step schedule) plus an endless
+    envelope-gated aggressor on the interleaved node split."""
+    jobs = [traffic.JobSpec("victim", victim_coll, vector_bytes,
+                            nodes=tuple(int(x) for x in victim_nodes),
+                            phased=phased)]
+    if aggr_coll and len(aggressor_nodes) >= 2:
+        jobs.append(traffic.JobSpec(
+            "aggressor", aggr_coll,
+            nodes=tuple(int(x) for x in aggressor_nodes),
+            endless=True, envelope_gated=True, sweep_bytes=False))
+    return build_program_flowset(topo, jobs, routing_mode=routing_mode,
+                                 k_max=k_max, seed=seed)
 
 
 def latency_model(kind: str, n: int, per_step_s: float = 2e-6) -> float:
     """Fixed per-iteration latency: serialized schedule steps x per-msg lat."""
-    steps = wire_bytes_model({
-        "ring_allgather": "ring_all_gather",
-        "ring_allreduce": "ring_all_reduce",
-        "alltoall": "linear_all_to_all",
-        "incast": "incast",
-    }[kind], n, 1.0)["steps"]
+    steps = wire_bytes_model(traffic.WIRE_KIND[kind], n, 1.0)["steps"]
     return steps * per_step_s

@@ -1,16 +1,20 @@
 """JAX fluid flow-level fabric simulator — pure-functional core.
 
-Victim/aggressor flow sets traverse a :class:`Topology` under a congestion-
-control model (cc.py) and a routing policy. The inner loop is a
-``jax.lax.scan`` over fixed-dt timesteps:
+Multi-job flow *programs* (traffic.py) traverse a :class:`Topology` under
+a congestion-control model (cc.py) and a routing policy. The inner loop
+is a ``jax.lax.scan`` over fixed-dt timesteps:
 
-  1. injection demand from per-flow CC rate limits,
+  1. injection demand from per-flow CC rate limits, gated by phase
+     membership (a flow transmits only while its job is in its phase),
   2. (adaptive routing) per-flow path choice by min queue occupancy,
   3. staged feed-forward propagation (FIFO fluid sharing per hop),
   4. queue integration (offered load vs capacity) + ECN/credit signals,
   5. CC rate update per fabric model + optional backpressure spreading,
-  6. victim-iteration completion bookkeeping (the paper's 1000-iteration
-     protocol, scaled: see bench.py).
+  6. per-job phase advance — barrier-gated on the slowest member flow
+     (DESIGN.md §7 straggler semantics) plus an optional compute gap —
+     and program-completion bookkeeping (a job wrapping its last phase
+     is one iteration of the paper's 1000-iteration protocol, scaled:
+     see bench.py).
 
 The engine is split into two pytrees:
 
@@ -60,20 +64,50 @@ def check_iter_budget(n_iters: int) -> None:
 
 @dataclasses.dataclass
 class FlowSet:
-    """Static flow structure for one experiment."""
+    """Static flow structure for one experiment (a packed traffic
+    program: every flow belongs to one phase of one job)."""
 
     paths: np.ndarray  # (F, K, H) link ids, pad = L (sink)
     n_paths: np.ndarray  # (F,)
     path_len: np.ndarray  # (F, K) hop counts (for minimal-path bias)
-    is_victim: np.ndarray  # (F,) bool
-    bytes_per_iter: np.ndarray  # (F,) victim bytes; aggressors ~inf
+    is_victim: np.ndarray  # (F,) bool — flow of a non-envelope-gated job
+    bytes_per_iter: np.ndarray  # (F,) bytes per phase visit; endless ~inf
     fixed_choice: np.ndarray  # (F,)
     host_caps: np.ndarray  # (F,) injection-link capacity per flow
     src_id: np.ndarray  # (F,) source node (NIC injection limiting)
+    # --- traffic-program tables (defaulted for legacy flat flow sets) ---
+    flow_job: Optional[np.ndarray] = None  # (F,) owning job id
+    flow_phase: Optional[np.ndarray] = None  # (F,) phase within the job
+    n_phases: Optional[np.ndarray] = None  # (J,) program length per job
+    phase_gap: Optional[np.ndarray] = None  # (J, P) compute gap per phase
+    sweep_mask: Optional[np.ndarray] = None  # (F,) bytes scale with sweep
+    job_names: Optional[List[str]] = None
+
+    def __post_init__(self):
+        # Legacy construction (no program tables): victims are job 0
+        # phase 0, aggressors job 1 phase 0, both single-phase loops.
+        if self.flow_job is None:
+            self.flow_job = np.where(self.is_victim, 0, 1).astype(np.int32)
+        if self.flow_phase is None:
+            self.flow_phase = np.zeros(len(self.is_victim), np.int32)
+        if self.n_phases is None:
+            n_jobs = int(self.flow_job.max()) + 1 if len(self.flow_job) \
+                else 1
+            self.n_phases = np.ones((n_jobs,), np.int32)
+        if self.phase_gap is None:
+            self.phase_gap = np.zeros((len(self.n_phases), 1), np.float32)
+        if self.sweep_mask is None:
+            self.sweep_mask = np.asarray(self.is_victim, bool)
+        if self.job_names is None:
+            self.job_names = [f"job{j}" for j in range(len(self.n_phases))]
 
     @property
     def n_flows(self) -> int:
         return len(self.is_victim)
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.n_phases)
 
 
 def pack_paths(paths_per_flow: List[List[List[int]]], sink: int, k_max: int = 4):
@@ -99,13 +133,15 @@ def pack_paths(paths_per_flow: List[List[List[int]]], sink: int, k_max: int = 4)
 @partial(jax.tree_util.register_dataclass,
          data_fields=["caps_pad", "caps_finite", "dst_sw", "src_sw", "paths",
                       "n_paths", "spray_choice", "path_len", "is_victim",
-                      "fixed_choice", "src_id"],
-         meta_fields=["L", "n_sw", "n_src", "routing"])
+                      "fixed_choice", "src_id", "flow_job", "flow_phase",
+                      "n_phases", "phase_gap"],
+         meta_fields=["L", "n_sw", "n_src", "routing", "n_jobs"])
 @dataclasses.dataclass(frozen=True)
 class FabricGeometry:
     """Everything structural: link capacities, switch adjacency, packed
-    flow paths. Built once per (topology, flow set); shared by every cell
-    of a parameter sweep."""
+    flow paths, and the traffic-program tables (which job/phase each flow
+    belongs to, program lengths, compute gaps). Built once per
+    (topology, flow program); shared by every cell of a parameter sweep."""
 
     caps_pad: jnp.ndarray  # (L+1,) with inf sink
     caps_finite: jnp.ndarray  # (L+1,) with 1.0 sink
@@ -118,10 +154,15 @@ class FabricGeometry:
     is_victim: jnp.ndarray  # (F,) bool
     fixed_choice: jnp.ndarray  # (F,)
     src_id: jnp.ndarray  # (F,)
+    flow_job: jnp.ndarray  # (F,) owning job per flow
+    flow_phase: jnp.ndarray  # (F,) phase membership per flow
+    n_phases: jnp.ndarray  # (J,) program length per job
+    phase_gap: jnp.ndarray  # (J, P) compute gap after each phase
     L: int
     n_sw: int
     n_src: int
     routing: int
+    n_jobs: int
 
     @property
     def n_flows(self) -> int:
@@ -157,7 +198,12 @@ def make_geometry(topo: Topology, flows: FlowSet,
         is_victim=jnp.asarray(flows.is_victim),
         fixed_choice=jnp.asarray(flows.fixed_choice),
         src_id=jnp.asarray(flows.src_id, jnp.int32),
-        L=L, n_sw=n_sw, n_src=int(flows.src_id.max()) + 1, routing=routing)
+        flow_job=jnp.asarray(flows.flow_job, jnp.int32),
+        flow_phase=jnp.asarray(flows.flow_phase, jnp.int32),
+        n_phases=jnp.asarray(flows.n_phases, jnp.int32),
+        phase_gap=jnp.asarray(flows.phase_gap, jnp.float32),
+        L=L, n_sw=n_sw, n_src=int(flows.src_id.max()) + 1, routing=routing,
+        n_jobs=flows.n_jobs)
 
 
 # --------------------------------------------------------------------------
@@ -226,17 +272,21 @@ def stack_params(params: List[SimParams]) -> SimParams:
 
 
 def init_state(geom: FabricGeometry, p: SimParams):
-    F = geom.n_flows
+    F, J = geom.n_flows, geom.n_jobs
     return {
         "c": p.host_caps,
-        "rem": jnp.where(geom.is_victim, p.bytes_per_iter, 1e30),
+        "rem": p.bytes_per_iter,
         "q": jnp.zeros((geom.L + 1,), jnp.float32),
         "arr": jnp.zeros((geom.L + 1,), jnp.float32),
         "thresh": jnp.full((geom.L + 1,), jnp.float32(1.0)) * p.kmin
         * p.qmax_bytes,
         "last_dec": jnp.zeros((F,), jnp.float32),
-        "it": jnp.zeros((), jnp.int32),
-        "t_done": jnp.zeros((TDONE_SLOTS,), jnp.float32),
+        # --- traffic-program state: per-job phase counter, remaining
+        # compute gap of the current phase, completed program iterations
+        "ph": jnp.zeros((J,), jnp.int32),
+        "gap": geom.phase_gap[:, 0],
+        "it": jnp.zeros((J,), jnp.int32),
+        "t_done": jnp.zeros((J, TDONE_SLOTS), jnp.float32),
         "qd_acc": jnp.zeros((), jnp.float32),
         "t": jnp.zeros((), jnp.float32),
     }
@@ -291,7 +341,13 @@ def step(geom: FabricGeometry, p: SimParams, state):
     dt = p.dt
     # aggressor envelope: traceable function of sim time (no host callback)
     env_t = envelope_at(p.env, state["t"])
-    alive = state["rem"] > 0
+    # phase membership: a flow transmits only while its job's phase
+    # counter sits on the flow's phase (and its phase bytes remain);
+    # negative phase id = wildcard, member of every phase
+    # (traffic.WILDCARD_PHASE — uniform ring schedules)
+    in_phase = (geom.flow_phase == state["ph"][geom.flow_job]) \
+        | (geom.flow_phase < 0)
+    alive = (state["rem"] > 0) & in_phase
     active = (geom.is_victim | (env_t > 0)) & alive
     gate = jnp.where(geom.is_victim, 1.0, env_t) * alive
     inject = state["c"] * gate
@@ -399,18 +455,39 @@ def step(geom: FabricGeometry, p: SimParams, state):
     c = jnp.clip(c, p.min_rate_frac * p.host_caps, p.host_caps)
     last_dec = jnp.where(dec, 0.0, state["last_dec"] + dt)
 
-    # ---- progress + iteration bookkeeping ----
+    # ---- progress + phase/program bookkeeping ----
     rem = state["rem"] - a * dt
-    vdone = ~jnp.any(geom.is_victim & (rem > 0))
     t_new = state["t"] + dt
+    # per-job barrier: a phase completes only when its SLOWEST member
+    # flow has drained (straggler semantics, DESIGN.md §7) ...
+    busy = jnp.zeros((geom.n_jobs,), jnp.int32).at[geom.flow_job].max(
+        (in_phase & (rem > 0)).astype(jnp.int32)) > 0
+    # ... then the compute gap of the phase runs before the barrier
+    # releases the next phase (gap == 0 -> advance in the same step,
+    # which is exactly the pre-program iteration semantics)
+    gap = state["gap"] - dt * (~busy)
+    advance = ~busy & (gap <= 0)
+    ph_next = jnp.where(advance,
+                        (state["ph"] + 1) % geom.n_phases, state["ph"])
+    wrap = advance & (state["ph"] + 1 >= geom.n_phases)
+    gap = jnp.where(advance,
+                    jnp.take_along_axis(geom.phase_gap, ph_next[:, None],
+                                        axis=1)[:, 0], gap)
+    # flows of the newly-entered phase reload their byte budget
+    # (wildcard flows re-arm at every phase entry)
+    enter = advance[geom.flow_job] \
+        & ((geom.flow_phase == ph_next[geom.flow_job])
+           | (geom.flow_phase < 0))
+    rem = jnp.where(enter, p.bytes_per_iter, rem)
+    # a job wrapping phase 0 completed one program iteration
     it = state["it"]
     slot = jnp.minimum(it, TDONE_SLOTS - 1)
-    t_done = jnp.where(vdone, state["t_done"].at[slot].set(t_new),
-                       state["t_done"])
-    it = it + vdone.astype(jnp.int32)
-    rem = jnp.where(vdone & geom.is_victim, p.bytes_per_iter, rem)
-    # synchronization gap between victim iterations partially drains queues
-    q = jnp.where(vdone, q * p.iter_drain, q)
+    onehot = jnp.arange(TDONE_SLOTS)[None, :] == slot[:, None]
+    t_done = jnp.where(wrap[:, None] & onehot, t_new, state["t_done"])
+    it = it + wrap.astype(jnp.int32)
+    # synchronization gap between iterations of the primary (measured)
+    # job partially drains queues
+    q = jnp.where(wrap[0], q * p.iter_drain, q)
 
     # queueing delay experienced by victim flows (seconds)
     qdel = jnp.max(jnp.where(valid, (q / geom.caps_finite)[plinks], 0.0),
@@ -420,8 +497,8 @@ def step(geom: FabricGeometry, p: SimParams, state):
     vict_goodput = jnp.sum(a * geom.is_victim)
 
     new_state = {"c": c, "rem": rem, "q": q, "arr": arrival,
-                 "thresh": thresh,
-                 "last_dec": last_dec, "it": it, "t_done": t_done,
+                 "thresh": thresh, "last_dec": last_dec,
+                 "ph": ph_next, "gap": gap, "it": it, "t_done": t_done,
                  "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
     return new_state, vict_goodput
 
@@ -438,7 +515,9 @@ def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
 
     def cond(carry):
         state, _, k = carry
-        return (k < max_chunks) & (state["it"] < n_iters)
+        # job 0 is the primary (measured) job; background jobs loop for
+        # as long as it runs and report however many programs they closed
+        return (k < max_chunks) & (state["it"][0] < n_iters)
 
     def body(carry):
         state, buf, k = carry
@@ -487,12 +566,15 @@ class SimResult:
 
 
 def summarize(out: dict, *, n_iters: int, warmup: int, dt: float,
-              chunk: int, stride: int, cell: Optional[int] = None) -> SimResult:
-    """Build a :class:`SimResult` from (optionally batched) run outputs."""
+              chunk: int, stride: int, cell: Optional[int] = None,
+              job: int = 0) -> SimResult:
+    """Build a :class:`SimResult` from (optionally batched) run outputs.
+    ``job`` selects which job's program completions to report (0 = the
+    primary job; background jobs may have closed fewer iterations)."""
     pick = (lambda x: np.asarray(x)) if cell is None else \
         (lambda x: np.asarray(x)[cell])
-    n_done = min(int(pick(out["it"])), n_iters, TDONE_SLOTS)
-    t_done = pick(out["t_done"])[:n_done]
+    n_done = min(int(pick(out["it"])[job]), n_iters, TDONE_SLOTS)
+    t_done = pick(out["t_done"])[job][:n_done]
     iter_times = np.diff(np.concatenate([[0.0], t_done]))
     iter_times = iter_times[warmup:] if n_done > warmup else iter_times
     total_t = float(pick(out["t"])) or 1e-9

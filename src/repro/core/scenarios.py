@@ -20,6 +20,7 @@ from repro.core import bench
 from repro.core import congestion as cong
 from repro.core.envelopes import Profile
 from repro.core.fabric import systems
+from repro.core.traffic import JobSpec
 
 KiB = 2 ** 10
 MiB = 2 ** 20
@@ -27,8 +28,13 @@ MiB = 2 ** 20
 
 @dataclasses.dataclass(frozen=True)
 class Grid:
-    """One flow-set's worth of cells: sizes x profiles (plus the implied
-    per-size baselines), vmapped by bench.run_grid."""
+    """One flow-program's worth of cells: sizes x profiles (plus the
+    implied per-size baselines), vmapped by bench.run_grid.
+
+    ``phased=True`` lowers the victim's step schedule into barrier-gated
+    phases; ``jobs`` replaces the victim/aggressor split with an explicit
+    multi-job program (job 0 is the measured primary; jobs without nodes
+    get an interleaved share of the allocation)."""
 
     system: str
     n_nodes: int
@@ -36,6 +42,8 @@ class Grid:
     sizes: Tuple[float, ...]
     profiles: Tuple[Profile, ...]
     victim: str = "ring_allgather"
+    phased: bool = False
+    jobs: Tuple[JobSpec, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +56,9 @@ class Scenario:
     # microbenchmark scenarios (wall-clock collective timing) carry their
     # payload sizes here instead of fabric grids
     microbench_sizes: Tuple[int, ...] = ()
+    # non-grid drivers (fig1/fig3/fig4) declare their sweep points here;
+    # the matching benchmarks/ driver interprets each tuple
+    points: Tuple[tuple, ...] = ()
 
 
 SCENARIOS: Dict[str, Callable[[bool], Scenario]] = {}
@@ -67,7 +78,8 @@ def run_grid_spec(scenario: Scenario, grid: Grid) -> List[bench.BenchResult]:
     return bench.run_grid(
         systems.get_system(grid.system), grid.n_nodes, grid.victim,
         grid.aggressor, grid.sizes, grid.profiles,
-        n_iters=scenario.n_iters, warmup=scenario.warmup)
+        n_iters=scenario.n_iters, warmup=scenario.warmup,
+        phased=grid.phased, jobs=list(grid.jobs) or None)
 
 
 def run_scenario(scenario: Scenario) -> Iterator[bench.BenchResult]:
@@ -90,6 +102,9 @@ def result_row(grid: Grid, r: bench.BenchResult) -> dict:
     if prof is not None and prof.kind in ("bursty", "random"):
         row["burst_ms"] = round(prof.burst_s * 1e3, 4)
         row["pause_ms"] = round(prof.pause_s * 1e3, 4)
+    if r.job_times:
+        row["job_times"] = ";".join(
+            f"{name}:{t * 1e6:.1f}us:{n}" for name, t, n in r.job_times)
     return row
 
 
@@ -205,6 +220,123 @@ def random_telegraph(quick: bool = False) -> Scenario:
         "random_telegraph",
         "Periodic vs random on/off aggressors at matched duty cycles.",
         grids)
+
+
+# --------------------------------------------------------------------------
+# Non-grid paper figures (fig1/fig3/fig4) — declared here so EVERY
+# benchmark driver routes through the registry; the matching driver
+# interprets the ``points`` tuples.
+# --------------------------------------------------------------------------
+
+
+@register
+def fig1_breakdown(quick: bool = False) -> Scenario:
+    sizes = (MiB, 16 * MiB) if quick else (MiB, 16 * MiB, 128 * MiB)
+    return Scenario(
+        "fig1_breakdown",
+        "Paper Fig. 1: ring AllReduce cost breakdown (reduce/memcpy vs "
+        "simulated EDR wire time) on 8 nodes.",
+        grids=(), points=tuple((s,) for s in sizes))
+
+
+@register
+def fig3_sawtooth(quick: bool = False) -> Scenario:
+    sizes = (16 * MiB,) if quick else (16 * MiB, 128 * MiB)
+    syss = ("haicgu_ce8850", "haicgu_ib", "nanjing_nslb")
+    return Scenario(
+        "fig3_sawtooth",
+        "Paper Fig. 3 / Obs. 1: CE8850 self-congestion sawtooth on 4-node "
+        "AllGather; EDR IB and CE9855 stay stable.",
+        grids=(), points=tuple((s, v) for s in syss for v in sizes))
+
+
+@register
+def fig4_nslb(quick: bool = False) -> Scenario:
+    sizes = (4 * MiB, 16 * MiB) if quick else \
+        (MiB, 4 * MiB, 16 * MiB, 64 * MiB)
+    return Scenario(
+        "fig4_nslb",
+        "Paper Fig. 4: NSLB on/off under steady AlltoAll congestion "
+        "(4+4 nodes, Nanjing CE9855 leaf-spine).",
+        grids=(), points=tuple((m, s) for m in ("nslb", "ecmp")
+                               for s in sizes))
+
+
+# --------------------------------------------------------------------------
+# Traffic-program scenario families (phased schedules, multi-job mixes)
+# --------------------------------------------------------------------------
+
+
+@register
+def phased_collectives(quick: bool = False) -> Scenario:
+    """Phased vs flattened lowering of the same victim under the same
+    aggressor: the shape of Fig. 5/6 cells when the collective's temporal
+    structure (barrier-gated ring shard steps; pairwise matchings vs the
+    linear all-pairs blob) is modeled instead of one static flow set.
+    The paired grids share (system, victim, aggressor, sizes), so the
+    ratio delta isolates the schedule."""
+    sysnames = ("leonardo", "cresco8") if quick else FIG5_SYSTEMS
+    victims = ("alltoall",) if quick else ("ring_allreduce", "alltoall")
+    sizes = (2 * MiB,) if quick else (32 * KiB, 2 * MiB)
+    profiles = (cong.steady(),) if quick else \
+        (cong.steady(), cong.bursty(2e-3, 2e-3))
+    grids = []
+    for s in sysnames:
+        for a in FIG5_AGGRESSORS:
+            for v in victims:
+                for ph in (False, True):
+                    grids.append(Grid(s, 32, a, sizes, profiles,
+                                      victim=v, phased=ph))
+    return Scenario(
+        "phased_collectives",
+        "Phased (barrier-gated step schedules) vs flattened victim "
+        "lowerings under steady/bursty aggressors.",
+        tuple(grids), n_iters=15, warmup=3)
+
+
+def _mix_jobs(kind: str) -> Tuple[JobSpec, ...]:
+    """Canned two-or-more-job programs. Job 0 is the measured primary;
+    background jobs are envelope-gated so the per-size baseline cell
+    (envelope off) isolates the primary job on the same allocation."""
+    if kind == "training_vs_training":
+        return (JobSpec("train_a", "ring_allreduce", phased=True),
+                JobSpec("train_b", "ring_allreduce", vector_bytes=2 * MiB,
+                        phased=True, envelope_gated=True,
+                        sweep_bytes=False))
+    if kind == "training_vs_incast":
+        return (JobSpec("train", "ring_allreduce", phased=True),
+                JobSpec("incast_job", "incast", endless=True,
+                        envelope_gated=True, sweep_bytes=False))
+    if kind == "four_tenant":
+        return (JobSpec("tenant0", "ring_allreduce", phased=True),) + tuple(
+            JobSpec(f"tenant{i}", "ring_allreduce", vector_bytes=2 * MiB,
+                    phased=True, envelope_gated=True, sweep_bytes=False)
+            for i in range(1, 4))
+    raise KeyError(kind)
+
+
+@register
+def multi_job_mix(quick: bool = False) -> Scenario:
+    """Concurrent-job interference (the multi-application congestion of
+    arXiv:1907.05312): a phased training job measured against a second
+    training tenant, an endless incast tenant, and a 4-tenant
+    fair-share — all inside one jit(vmap) per grid, per-job iteration
+    times reported in job_times."""
+    sysnames = ("leonardo",) if quick else ("leonardo", "lumi", "cresco8")
+    mixes = ("training_vs_training", "training_vs_incast") if quick else \
+        ("training_vs_training", "training_vs_incast", "four_tenant")
+    sizes = (2 * MiB,) if quick else (32 * KiB, 2 * MiB)
+    profiles = (cong.steady(),) if quick else \
+        (cong.steady(), cong.bursty(2e-3, 2e-3))
+    grids = tuple(Grid(s, 32, mix, sizes, profiles,
+                       victim="ring_allreduce", jobs=_mix_jobs(mix))
+                  for s in sysnames for mix in mixes)
+    return Scenario(
+        "multi_job_mix",
+        "Multi-job fabric sharing: training-vs-training, training-vs-"
+        "incast, and N-tenant fair-share mixes (job 0 measured; "
+        "background tenants envelope-gated).",
+        grids, n_iters=12, warmup=3)
 
 
 @register

@@ -1,0 +1,193 @@
+"""Traffic-program IR tests: schedule compilation vs the analytic wire
+model, phase-structure invariants, bandwidth lower bounds, phased-vs-
+flattened congestion divergence, and multi-job mixes through run_grid."""
+import numpy as np
+import pytest
+
+from repro.core import bench, congestion as cong, traffic
+from repro.core.collectives import wire_bytes_model
+from repro.core.fabric import systems
+
+KINDS = ("ring_allgather", "ring_allreduce", "alltoall",
+         "pairwise_alltoall", "incast")
+
+
+# --------------------------------------------------------------------------
+# compiler: phased bytes x steps == wire_bytes_model, for every kind
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", [4, 5, 8])
+@pytest.mark.parametrize("phased", [True, False])
+def test_program_matches_wire_model(kind, n, phased):
+    v = 3 << 20
+    job = traffic.JobSpec("j", kind, v, nodes=tuple(range(n)),
+                          phased=phased)
+    prog = traffic.compile_programs([job])  # validate=True raises on drift
+    got = traffic.job_wire_stats(prog, 0)
+    model = wire_bytes_model(traffic.WIRE_KIND[kind], n, v)
+    assert np.isclose(got["bytes"], model["bytes"], rtol=1e-6)
+    if phased:
+        want = model["steps"] if kind != "alltoall" else \
+            wire_bytes_model("pairwise_all_to_all", n, v)["steps"]
+        assert got["steps"] == want
+    else:
+        assert got["steps"] == 1
+
+
+def test_pairwise_phases_are_perfect_matchings():
+    """Power-of-two pairwise AlltoAll: every phase pairs each rank with
+    exactly one partner (r XOR k), and partners are symmetric."""
+    phases = traffic.compile_phases("pairwise_alltoall", range(8), 8.0)
+    assert len(phases) == 7
+    for k, ph in enumerate(phases, start=1):
+        srcs = [s for s, _, _ in ph.flows]
+        assert sorted(srcs) == list(range(8))  # each rank sends once
+        pair = {s: d for s, d, _ in ph.flows}
+        assert all(pair[d] == s for s, d in pair.items())  # symmetric
+        assert all(d == s ^ k for s, d in pair.items())
+
+
+def test_incast_phases_serialize_fan_in():
+    phases = traffic.compile_phases("incast", range(6), 5.0)
+    assert len(phases) == 5
+    for ph in phases:
+        assert len(ph.flows) == 1 and ph.flows[0][1] == 0
+
+
+def test_compile_rejects_byte_drift():
+    """The validator must catch a program whose bytes disagree with the
+    analytic model."""
+    job = traffic.JobSpec("j", "ring_allgather", 1 << 20,
+                          nodes=tuple(range(4)))
+    prog = traffic.compile_programs([job])
+    prog.bytes_per_phase = prog.bytes_per_phase * 2.0
+    with pytest.raises(ValueError):
+        traffic.check_program(prog)
+
+
+def test_uniform_ring_schedule_collapses_to_wildcard_rows():
+    """Phased ring schedules reuse the same n neighbor edges every step,
+    so the packed program stores one wildcard row per edge (re-armed at
+    each phase entry) instead of n_phases copies."""
+    n = 8
+    job = traffic.JobSpec("j", "ring_allreduce", 1 << 20,
+                          nodes=tuple(range(n)), phased=True)
+    prog = traffic.compile_programs([job])
+    assert prog.n_flows == n  # not n * 2(n-1)
+    assert (prog.flow_phase == traffic.WILDCARD_PHASE).all()
+    assert int(prog.n_phases[0]) == 2 * (n - 1)
+    # non-uniform schedules (pairwise, incast) keep per-phase rows
+    pw = traffic.compile_programs([traffic.JobSpec(
+        "p", "pairwise_alltoall", 1 << 20, nodes=tuple(range(n)))])
+    assert (pw.flow_phase >= 0).all() and pw.n_flows == n * (n - 1)
+
+
+def test_split_nodes_never_double_books_pinned_nodes():
+    jobs = [traffic.JobSpec("a", "alltoall"),
+            traffic.JobSpec("b", "incast", nodes=(0, 1, 2, 3))]
+    out = traffic.split_nodes(range(8), jobs)
+    assert out[0].nodes == (4, 5, 6, 7)  # pinned nodes excluded
+    assert out[1].nodes == (0, 1, 2, 3)
+
+
+def test_zero_flow_job_rejected():
+    """A job whose node share is too small to run its collective must
+    fail loudly at compile time, not silently complete empty phases."""
+    with pytest.raises(ValueError, match="zero flows"):
+        traffic.compile_programs(
+            [traffic.JobSpec("j", "alltoall", nodes=(3,))])
+
+
+def test_split_nodes_interleaves():
+    jobs = [traffic.JobSpec("a", "alltoall"), traffic.JobSpec("b", "incast")]
+    out = traffic.split_nodes(range(8), jobs)
+    assert out[0].nodes == (0, 2, 4, 6)
+    assert out[1].nodes == (1, 3, 5, 7)
+    # pre-assigned nodes survive
+    pinned = traffic.JobSpec("c", "alltoall", nodes=(9, 11))
+    out2 = traffic.split_nodes(range(8), [jobs[0], pinned])
+    assert out2[1].nodes == (9, 11) and out2[0].nodes == tuple(range(8))
+
+
+# --------------------------------------------------------------------------
+# engine: phased programs respect physics and diverge from flattened ones
+# --------------------------------------------------------------------------
+
+def test_phased_ring_allreduce_bandwidth_lower_bound():
+    """An uncongested phased ring AllReduce can complete no faster than
+    its wire bytes over the injection rate (per-phase barriers only ever
+    add time)."""
+    sysp = systems.get_system("haicgu_ib")  # single switch, 100 Gb/s
+    n, v = 8, 8 << 20
+    r = bench.run_point(sysp, n, "ring_allreduce", "", v,
+                        cong.no_congestion(), n_iters=12, warmup=3,
+                        phased=True)
+    cap = 100e9 / 8.0  # B/s per NIC
+    # victims are the even half of the allocation -> ring of n/2 ranks
+    nv = n // 2
+    t_lb = wire_bytes_model("ring_all_reduce", nv, v)["bytes"] / cap
+    assert r.t_uncongested_s >= t_lb, (r.t_uncongested_s, t_lb)
+    # and within a small multiple (phases quantize to dt, adding < ~2x)
+    assert r.t_uncongested_s < 6.0 * t_lb, (r.t_uncongested_s, t_lb)
+
+
+def test_phased_and_flattened_ratios_differ_under_same_aggressor():
+    """Acceptance: a phased ring AllReduce and a flattened AlltoAll
+    produce measurably different congestion ratios under the same
+    steady incast aggressor — temporal structure changes congestion
+    impact, which the pre-IR single-blob engine could not express."""
+    sysp = systems.get_system("leonardo")
+    kw = dict(n_iters=10, warmup=2)
+    phased_ar = bench.run_point(sysp, 16, "ring_allreduce", "incast",
+                                2 << 20, cong.steady(), phased=True, **kw)
+    flat_a2a = bench.run_point(sysp, 16, "alltoall", "incast", 2 << 20,
+                               cong.steady(), **kw)
+    assert abs(flat_a2a.ratio - phased_ar.ratio) > 0.05, \
+        (flat_a2a.ratio, phased_ar.ratio)
+
+
+def test_pairwise_phasing_changes_alltoall_congestion():
+    """Same victim kind, two lowerings: the flattened linear AlltoAll
+    (all n(n-1) pairs at once) and the phased pairwise schedule (n-flow
+    perfect matchings behind barriers) see measurably different impact
+    from the same aggressor on the blocking fat-tree."""
+    sysp = systems.get_system("cresco8")
+    kw = dict(n_iters=10, warmup=2)
+    flat = bench.run_point(sysp, 16, "alltoall", "alltoall", 2 << 20,
+                           cong.steady(), **kw)
+    phased = bench.run_point(sysp, 16, "alltoall", "alltoall", 2 << 20,
+                             cong.steady(), phased=True, **kw)
+    assert abs(flat.ratio - phased.ratio) > 0.05, (flat.ratio, phased.ratio)
+
+
+def test_two_job_mix_runs_batched_with_per_job_times():
+    """Acceptance: a two-training-job mix sweeps through bench.run_grid
+    (one jit(vmap) compile for the whole grid) and reports per-job
+    iteration times for both tenants."""
+    jobs = [traffic.JobSpec("train_a", "ring_allreduce", phased=True),
+            traffic.JobSpec("train_b", "ring_allreduce",
+                            vector_bytes=2 << 20, phased=True,
+                            envelope_gated=True, sweep_bytes=False)]
+    res = bench.run_grid(systems.get_system("lumi"), 16, "", "",
+                         [1 << 20, 4 << 20], [cong.steady()],
+                         n_iters=8, warmup=2, jobs=jobs)
+    assert len(res) == 2  # sizes x profiles
+    for r in res:
+        names = [name for name, _, _ in r.job_times]
+        assert "train_a" in names and "train_b" in names, r.job_times
+        by = dict((name, (t, n)) for name, t, n in r.job_times)
+        assert by["train_a"][1] == 8  # primary ran to completion
+        assert by["train_b"][1] >= 1  # background tenant progressed
+        assert by["train_a"][0] > 0 and by["train_b"][0] > 0
+        assert 0.0 < r.ratio <= 1.1
+
+
+def test_endless_aggressor_reports_no_iterations():
+    """Endless background jobs never close a program iteration, so they
+    must not appear in job_times."""
+    r = bench.run_point(systems.get_system("leonardo"), 8, "ring_allgather",
+                        "incast", 1 << 20, cong.steady(), n_iters=8,
+                        warmup=2)
+    names = [name for name, _, _ in r.job_times]
+    assert names == ["victim"], r.job_times
