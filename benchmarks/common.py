@@ -56,6 +56,20 @@ def _grid_victim_label(grid) -> str:
                                       list(grid.jobs) or None)
 
 
+def expected_grid_keys(grid) -> "List[tuple]":
+    """The exact cache-key tuples one grid's rows will carry, in result
+    order — the single source of truth shared by the CSV cache and the
+    registry-completeness test (so key layout and result_row cannot
+    drift apart). Scale-batched grids expand their (system, n_nodes)
+    cells; plain grids are the one-cell special case."""
+    vic = _grid_victim_label(grid)
+    cells = list(getattr(grid, "cells", ()) or ()) \
+        or [(grid.system, grid.n_nodes)]
+    return [(s, str(n), vic, grid.aggressor or "none", str(float(v)),
+             p.label())
+            for (s, n) in cells for v in grid.sizes for p in grid.profiles]
+
+
 def scenario_rows(scenario, force: bool = False) -> List[Dict]:
     """Run a registered scenario with grid-level CSV caching: a grid whose
     cells are all cached is skipped; otherwise the whole grid re-runs in
@@ -65,10 +79,7 @@ def scenario_rows(scenario, force: bool = False) -> List[Dict]:
     path, cache = _load_cache(scenario.name, SCENARIO_KEYS, force)
     rows = []
     for grid in scenario.grids:
-        expected = [(grid.system, str(grid.n_nodes),
-                     _grid_victim_label(grid),
-                     grid.aggressor or "none", str(float(v)), p.label())
-                    for v in grid.sizes for p in grid.profiles]
+        expected = expected_grid_keys(grid)
         if all(k in cache for k in expected):
             rows.extend(cache[k] for k in expected)
             continue

@@ -1,8 +1,10 @@
-"""Beyond-paper congestion families enabled by traceable envelopes and
-the traffic-program IR: ramp onsets, random telegraph aggressors,
-multi-tenant envelope mixes, phased vs flattened collective schedules,
-and concurrent multi-job interference (scenario registry: ramp_onset /
-random_telegraph / multi_tenant / phased_collectives / multi_job_mix)."""
+"""Beyond-paper congestion families enabled by traceable envelopes, the
+traffic-program IR, and the scale-batched geometry engine: ramp onsets,
+random telegraph aggressors, multi-tenant envelope mixes, phased vs
+flattened collective schedules, concurrent multi-job interference, and
+the cross-scale / cross-topology sweeps (scenario registry: ramp_onset /
+random_telegraph / multi_tenant / phased_collectives / multi_job_mix /
+scale_sweep / mixed_topology)."""
 from __future__ import annotations
 
 import argparse
@@ -11,7 +13,8 @@ from benchmarks.common import scenario_rows, size_label
 from repro.core import scenarios
 
 FAMILIES = ("ramp_onset", "random_telegraph", "multi_tenant",
-            "phased_collectives", "multi_job_mix")
+            "phased_collectives", "multi_job_mix", "scale_sweep",
+            "mixed_topology")
 
 
 def main(force: bool = False, quick: bool = False, families=FAMILIES):
@@ -21,11 +24,11 @@ def main(force: bool = False, quick: bool = False, families=FAMILIES):
         rows = scenario_rows(scen, force=force)
         all_rows.extend(rows)
         print(f"\n# {name} — {scen.description}")
-        print(f"{'system':>10} {'victim':>22} {'aggr':>20} {'size':>8} "
-              f"{'profile':>22} {'ratio':>7}")
+        print(f"{'system':>10} {'n':>4} {'victim':>22} {'aggr':>20} "
+              f"{'size':>8} {'profile':>22} {'ratio':>7}")
         for r in rows:
-            print(f"{r['system']:>10} {r.get('victim', ''):>22} "
-                  f"{r['aggressor']:>20} "
+            print(f"{r['system']:>10} {r['n_nodes']:>4} "
+                  f"{r.get('victim', ''):>22} {r['aggressor']:>20} "
                   f"{size_label(r['vector_bytes']):>8} "
                   f"{r['profile']:>22} {float(r['ratio']):>7.3f}"
                   + (f"  [{r['job_times']}]"

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -27,11 +27,17 @@ import numpy as np
 from repro.core import congestion as cong
 from repro.core import traffic
 from repro.core.fabric.simulator import (TDONE_SLOTS, FabricGeometry,
-                                         SimParams, check_iter_budget,
-                                         make_geometry, make_params,
-                                         run_cell, run_cells, stack_params,
+                                         SimParams, bucket_dims,
+                                         check_iter_budget, make_geometry,
+                                         make_params, pad_geometry, run_cell,
+                                         run_cells, run_cells_hetero,
+                                         stack_geometries, stack_params,
                                          summarize)
-from repro.core.fabric.systems import SystemPreset
+from repro.core.fabric.systems import SystemPreset, get_system
+
+# One (system, n_nodes) cell of a scale-batched sweep; systems may be
+# preset objects or registry names.
+ScaleCell = Tuple[Union[str, SystemPreset], int]
 
 
 @dataclasses.dataclass
@@ -79,11 +85,14 @@ def _mean_iter_time(res, lat: float) -> float:
 _TOPO_CACHE: dict = {}
 
 
-def machine_topology(system: SystemPreset):
-    """Full-machine topology (cached — reused across heatmap cells)."""
-    key = system.name
+def machine_topology(system: SystemPreset, n_nodes: int = 0):
+    """Full-machine topology (cached — reused across heatmap cells).
+    Testbed systems (``machine_nodes == 0``) are built at the allocation
+    size instead, so scale sweeps over them actually scale the fabric."""
+    n = system.machine_nodes or (n_nodes or 8)
+    key = (system.name, n)
     if key not in _TOPO_CACHE:
-        _TOPO_CACHE[key] = system.make_topology(system.machine_nodes or 8)
+        _TOPO_CACHE[key] = system.make_topology(n)
     return _TOPO_CACHE[key]
 
 
@@ -164,11 +173,18 @@ class GridCase:
             self.job_names = ["victim", "aggressor"]
 
     def cell_params(self, vector_bytes: float, profile: cong.Profile,
-                    dt: float) -> SimParams:
+                    dt: float, n_flows: Optional[int] = None) -> SimParams:
+        """Per-cell traced params; ``n_flows`` pads the flow axis to a
+        geometry-bucket width (pad flows: 0 bytes — never alive — and a
+        positive dummy host cap so no divide ever sees 0)."""
         bpi = np.where(self.sweep_mask, self.unit_bytes * vector_bytes,
                        self.unit_bytes)
+        host_caps = self.host_caps
+        if n_flows is not None and n_flows > len(bpi):
+            bpi = traffic.pad_rows(bpi, n_flows, 0.0)
+            host_caps = traffic.pad_rows(host_caps, n_flows, 1.0)
         return make_params(self.system.cc, dt=dt, bytes_per_iter=bpi,
-                           host_caps=self.host_caps, env=profile.params())
+                           host_caps=host_caps, env=profile.params())
 
     def lat(self) -> float:
         return cong.latency_model(self.victim_coll, self.n_victims)
@@ -189,7 +205,7 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
     cell.
     """
     if topo is None:
-        topo = machine_topology(system)
+        topo = machine_topology(system, n_nodes)
     if nodes is None:
         nodes = allocate(system, n_nodes)
     if jobs is not None:
@@ -253,54 +269,43 @@ def _job_times(out, case: GridCase, *, n_iters, warmup, cell) -> tuple:
     return tuple(rows)
 
 
-def run_grid(system: SystemPreset, n_nodes: int, victim_coll: str,
-             aggr_coll: str, sizes: Sequence[float],
-             profiles: Sequence[cong.Profile], *, n_iters: int = 60,
-             warmup: int = 10, dt: Optional[float] = None,
-             max_steps: int = 200_000, chunk: int = 2048,
-             trace_stride: int = 8, phased: bool = False,
-             jobs: Optional[Sequence[traffic.JobSpec]] = None,
-             ) -> List[BenchResult]:
-    """All (vector size x profile) cells of one experiment in a single
-    batched call: a per-size baseline (aggressors/background jobs off)
-    plus one congested cell per profile, sharing one FlowSet/geometry and
-    one compile. ``phased``/``jobs`` select the traffic program (see
-    build_case); per-job iteration times ride along in each result."""
-    check_iter_budget(n_iters)
-    case = build_case(system, n_nodes, victim_coll, aggr_coll,
-                      phased=phased, jobs=jobs)
-    lat = case.lat()
-
-    cells: List[Tuple[float, cong.Profile]] = []
+def _cell_dts(case: GridCase, sizes: Sequence[float], n_profiles: int,
+              dt: Optional[float], lat: float) -> List[float]:
+    """One dt per sub-cell (size-major, baseline + profiles per size),
+    chosen per cell on the shared power-of-two ladder."""
     dts: List[float] = []
     for v in sizes:
         cell_dt = dt if dt is not None else choose_dt(
             case.topo, case.n_victims, float(v), lat,
             n_phases=case.max_phases)
-        for prof in [cong.no_congestion()] + list(profiles):
-            cells.append((float(v), prof))
-            dts.append(cell_dt)
+        dts.extend([cell_dt] * (1 + n_profiles))
+    return dts
 
-    params = stack_params([case.cell_params(v, prof, d)
-                           for (v, prof), d in zip(cells, dts)])
-    max_chunks = -(-max_steps // chunk)
-    out = run_cells(case.geom, params, jnp.asarray(n_iters, jnp.int32),
-                    chunk=chunk, max_chunks=max_chunks, stride=trace_stride)
 
+def _grid_results(case: GridCase, out: dict, sizes: Sequence[float],
+                  profiles: Sequence[cong.Profile], dts: Sequence[float], *,
+                  n_iters: int, warmup: int, chunk: int, stride: int,
+                  cell_prefix: tuple = ()) -> List[BenchResult]:
+    """Marshal one case's (size x baseline/profile) sub-cells out of a
+    batched run. ``cell_prefix`` indexes the leading batch axes in front
+    of the sub-cell axis (run_cells_hetero adds a topology-cell axis)."""
+    lat = case.lat()
     per_prof = 1 + len(profiles)
     results = []
     for si, v in enumerate(sizes):
         base_i = si * per_prof
         base = summarize(out, n_iters=n_iters, warmup=warmup, dt=dts[base_i],
-                         chunk=chunk, stride=trace_stride, cell=base_i)
+                         chunk=chunk, stride=stride,
+                         cell=cell_prefix + (base_i,))
         t_u = _mean_iter_time(base, lat)
         for pi, prof in enumerate(profiles):
             ci = base_i + 1 + pi
             res = summarize(out, n_iters=n_iters, warmup=warmup, dt=dts[ci],
-                            chunk=chunk, stride=trace_stride, cell=ci)
+                            chunk=chunk, stride=stride,
+                            cell=cell_prefix + (ci,))
             t_c = _mean_iter_time(res, lat)
             results.append(BenchResult(
-                system=system.name, n_nodes=n_nodes,
+                system=case.system.name, n_nodes=case.n_nodes,
                 victim=victim_label(case.victim_coll, case.primary_phased),
                 aggressor=case.aggr_coll or "none", profile=prof.label(),
                 vector_bytes=float(v), t_uncongested_s=t_u,
@@ -311,9 +316,122 @@ def run_grid(system: SystemPreset, n_nodes: int, victim_coll: str,
                 if len(res.victim_rate_trace) else 0.0,
                 n_iters=(base.n_done, res.n_done),
                 job_times=_job_times(out, case, n_iters=n_iters,
-                                     warmup=warmup, cell=ci),
+                                     warmup=warmup,
+                                     cell=cell_prefix + (ci,)),
             ))
     return results
+
+
+def run_grid(system: Union[SystemPreset, Sequence[ScaleCell]], n_nodes: int,
+             victim_coll: str, aggr_coll: str, sizes: Sequence[float],
+             profiles: Sequence[cong.Profile], *, n_iters: int = 60,
+             warmup: int = 10, dt: Optional[float] = None,
+             max_steps: int = 200_000, chunk: int = 2048,
+             trace_stride: int = 8, phased: bool = False,
+             jobs: Optional[Sequence[traffic.JobSpec]] = None,
+             ) -> List[BenchResult]:
+    """All (vector size x profile) cells of one experiment in a single
+    batched call: a per-size baseline (aggressors/background jobs off)
+    plus one congested cell per profile, sharing one FlowSet/geometry and
+    one compile. ``phased``/``jobs`` select the traffic program (see
+    build_case); per-job iteration times ride along in each result.
+
+    ``system`` may also be a list of ``(system, n_nodes)`` cells —
+    heterogeneous topologies and scales. Those route through the
+    scale-batched engine (:func:`run_scale_grid`): geometries are padded
+    to bucket shapes and stacked, so the whole cross-scale sweep costs
+    one compile per bucket instead of one per scale. ``n_nodes`` is
+    ignored in that mode."""
+    if not isinstance(system, SystemPreset):
+        return run_scale_grid(system, victim_coll, aggr_coll, sizes,
+                              profiles, n_iters=n_iters, warmup=warmup,
+                              dt=dt, max_steps=max_steps, chunk=chunk,
+                              trace_stride=trace_stride, phased=phased,
+                              jobs=jobs)
+    check_iter_budget(n_iters)
+    case = build_case(system, n_nodes, victim_coll, aggr_coll,
+                      phased=phased, jobs=jobs)
+    dts = _cell_dts(case, sizes, len(profiles), dt, case.lat())
+    cells = [(float(v), prof) for v in sizes
+             for prof in [cong.no_congestion()] + list(profiles)]
+    params = stack_params([case.cell_params(v, prof, d)
+                           for (v, prof), d in zip(cells, dts)])
+    max_chunks = -(-max_steps // chunk)
+    out = run_cells(case.geom, params, jnp.asarray(n_iters, jnp.int32),
+                    chunk=chunk, max_chunks=max_chunks, stride=trace_stride)
+    return _grid_results(case, out, sizes, profiles, dts, n_iters=n_iters,
+                         warmup=warmup, chunk=chunk, stride=trace_stride)
+
+
+# --------------------------------------------------------------------------
+# Scale-batched grids: heterogeneous (system, n_nodes) cells in one vmap
+# --------------------------------------------------------------------------
+
+
+def _round_pow2(x: int) -> int:
+    """Bucket-size policy: round every geometry dim up to a power of two
+    so different cell sets resolve to the same padded shape and the JIT
+    cache hits across sweeps (DESIGN.md §11)."""
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def run_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
+                   aggr_coll: str, sizes: Sequence[float],
+                   profiles: Sequence[cong.Profile], *, n_iters: int = 60,
+                   warmup: int = 10, dt: Optional[float] = None,
+                   max_steps: int = 200_000, chunk: int = 2048,
+                   trace_stride: int = 8, phased: bool = False,
+                   jobs: Optional[Sequence[traffic.JobSpec]] = None,
+                   ) -> List[BenchResult]:
+    """A whole cross-scale experiment — heterogeneous ``(system,
+    n_nodes)`` cells x (vector size x profile) — in one batched call per
+    geometry *bucket*.
+
+    Cells are grouped by routing mode (the one meta field padding cannot
+    unify); each bucket's geometries are padded to a common power-of-two
+    shape (masks keep the padding provably inert — a padded run is
+    bit-identical to its unpadded equivalent) and stacked under a nested
+    ``jit(vmap(vmap(...)))``, so an EDR/HDR/NDR/Slingshot x {16..512}
+    nodes x collective sweep compiles the simulator at most once per
+    bucket. Results come back in input order: cells major, then sizes,
+    then baseline/profiles (matching a sequential per-cell run_grid
+    concatenation)."""
+    check_iter_budget(n_iters)
+    cases = []
+    for sysname, n in cells:
+        sysp = get_system(sysname) if isinstance(sysname, str) else sysname
+        cases.append(build_case(sysp, int(n), victim_coll, aggr_coll,
+                                phased=phased, jobs=jobs))
+
+    buckets: dict = {}
+    for ci, case in enumerate(cases):
+        buckets.setdefault(case.geom.routing, []).append(ci)
+
+    max_chunks = -(-max_steps // chunk)
+    per_case: List[Optional[List[BenchResult]]] = [None] * len(cases)
+    for idxs in buckets.values():
+        dims = bucket_dims([cases[i].geom for i in idxs],
+                           round_up=_round_pow2)
+        stacked = stack_geometries([pad_geometry(cases[i].geom, dims)
+                                    for i in idxs])
+        all_dts = [_cell_dts(cases[i], sizes, len(profiles), dt,
+                             cases[i].lat()) for i in idxs]
+        sub_cells = [(float(v), prof) for v in sizes
+                     for prof in [cong.no_congestion()] + list(profiles)]
+        params = stack_params([
+            stack_params([cases[i].cell_params(v, prof, d,
+                                               n_flows=dims.n_flows)
+                          for (v, prof), d in zip(sub_cells, all_dts[k])])
+            for k, i in enumerate(idxs)])
+        out = run_cells_hetero(stacked, params,
+                               jnp.asarray(n_iters, jnp.int32), chunk=chunk,
+                               max_chunks=max_chunks, stride=trace_stride)
+        for k, i in enumerate(idxs):
+            per_case[i] = _grid_results(
+                cases[i], out, sizes, profiles, all_dts[k], n_iters=n_iters,
+                warmup=warmup, chunk=chunk, stride=trace_stride,
+                cell_prefix=(k,))
+    return [r for rs in per_case for r in rs]
 
 
 def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,

@@ -65,12 +65,24 @@ AGGRESSOR_BYTES = traffic.ENDLESS_BYTES  # endless loop (paper §III-A)
 def build_program_flowset(topo: Topology, jobs: Sequence[traffic.JobSpec],
                           routing_mode: str = "deterministic",
                           k_max: int = 4, seed: int = 0,
-                          validate: bool = True) -> FlowSet:
+                          validate: bool = True,
+                          pad_to: Tuple[int, int, int] = None) -> FlowSet:
     """Compile a multi-job traffic program and bind it to a topology:
     per-flow paths, NIC caps, and the packed phase tables the simulator
     executes. One FlowSet = one geometry = one JIT entry for every cell
-    of a sweep over this program."""
+    of a sweep over this program.
+
+    ``pad_to=(n_flows, n_jobs, n_phases)`` pads the program to bucket
+    dims (traffic.pad_program) so flow sets of different node counts
+    share one array shape; padding rows are inert by construction
+    (0-byte flows of an envelope-gated pad job). Validation runs on the
+    real prefix either way."""
     prog = traffic.compile_programs(jobs, validate=validate)
+    if pad_to is not None:
+        prog = traffic.pad_program(prog, n_flows=pad_to[0],
+                                   n_jobs=pad_to[1], n_phases=pad_to[2])
+        if validate:
+            traffic.check_program(prog)  # still exact on the valid prefix
     src_dst = [(int(s), int(d)) for s, d in zip(prog.src, prog.dst)]
     paths_per_flow = [topo.paths(s, d) for s, d in src_dst]
     sink = len(topo.caps)

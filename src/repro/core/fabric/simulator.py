@@ -37,9 +37,10 @@ not from fitting.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,10 +50,24 @@ from repro.core.fabric.cc import (CCParams, KIND_AI_ECN, KIND_DCQCN, KIND_IB,
                                   KIND_SLINGSHOT, ROUTE_ADAPTIVE, ROUTE_FIXED)
 from repro.core.fabric.topology import Topology
 from repro.core.envelopes import ENV_COMPONENTS, envelope_at, no_congestion
+from repro.core.traffic import pad_rows
 
 # Fixed iteration-time buffer: n_iters is traced (no recompile across
 # protocols); completed iterations beyond the buffer fold into the last slot.
 TDONE_SLOTS = 96
+
+# How often each jitted engine entry has been TRACED (== compiled) since
+# import. Python side effects run only while tracing, so the increments
+# below fire once per compile; tests assert a whole scale sweep costs at
+# most one compile per geometry bucket (DESIGN.md §11).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def trace_count(entry: str = None) -> int:
+    """Total traces of one engine entry (or all entries)."""
+    if entry is None:
+        return sum(TRACE_COUNTS.values())
+    return TRACE_COUNTS[entry]
 
 
 def check_iter_budget(n_iters: int) -> None:
@@ -170,20 +185,51 @@ class FabricGeometry:
 
 
 def make_geometry(topo: Topology, flows: FlowSet,
-                  routing: int = ROUTE_FIXED) -> FabricGeometry:
-    L = len(topo.caps)
-    caps_pad = jnp.asarray(np.concatenate([topo.caps, [np.inf]]), jnp.float32)
-    caps_finite = jnp.asarray(np.concatenate([topo.caps, [1.0]]), jnp.float32)
+                  routing: int = ROUTE_FIXED,
+                  prune: bool = True) -> FabricGeometry:
+    """Bind a flow set to a topology.
+
+    ``prune=True`` (default) restricts the per-link state arrays to the
+    links actually referenced by some flow path, remapping link ids
+    densely (and likewise switch/source ids). An allocation of tens of
+    nodes on a multi-thousand-node machine touches a few hundred links,
+    so this shrinks every per-step scatter from machine size to
+    allocation size. Untouched links can never interact with a flow
+    (their queues stay 0 and no path reads them), so pruning leaves all
+    flow-visible outputs bit-identical — tests/test_grid.py asserts it.
+    """
+    L_full = len(topo.caps)
+    paths_np = np.asarray(flows.paths)
+    if prune:
+        used = np.unique(paths_np[paths_np < L_full]).astype(np.int64)
+    else:
+        used = np.arange(L_full, dtype=np.int64)
+    L = len(used)
+    remap = np.full((L_full + 1,), L, np.int32)
+    remap[used] = np.arange(L, dtype=np.int32)
+    paths_np = remap[paths_np]  # old sink (== L_full) -> new sink (== L)
+    caps = np.asarray(topo.caps, np.float64)[used]
+    caps_pad = jnp.asarray(np.concatenate([caps, [np.inf]]), jnp.float32)
+    caps_finite = jnp.asarray(np.concatenate([caps, [1.0]]), jnp.float32)
     # link <-> switch adjacency for backpressure spreading
     sw_ids: dict = {}
     dst_sw = np.zeros(L + 1, np.int32)
     src_sw = np.zeros(L + 1, np.int32)
-    for li, (a, b) in enumerate(topo.link_names):
+    for li, gi in enumerate(used):
+        a, b = topo.link_names[int(gi)]
         if not (isinstance(b, tuple) and b[0] == "h"):
             dst_sw[li] = 1 + sw_ids.setdefault(b, len(sw_ids))
         if not (isinstance(a, tuple) and a[0] == "h"):
             src_sw[li] = 1 + sw_ids.setdefault(a, len(sw_ids))
     n_sw = len(sw_ids) + 2  # 0 == "no switch" (host endpoints)
+    # source (NIC) ids densified the same way
+    src_raw = np.asarray(flows.src_id, np.int64)
+    if prune and len(src_raw):
+        _, src_dense = np.unique(src_raw, return_inverse=True)
+        n_src = int(src_dense.max()) + 1
+    else:
+        src_dense = src_raw
+        n_src = int(src_raw.max()) + 1 if len(src_raw) else 1
     # sprayed "home" path per flow: deterministic hash spread over the
     # candidates so concurrent flows do not herd onto one port
     F = flows.n_flows
@@ -192,18 +238,139 @@ def make_geometry(topo: Topology, flows: FlowSet,
     return FabricGeometry(
         caps_pad=caps_pad, caps_finite=caps_finite,
         dst_sw=jnp.asarray(dst_sw), src_sw=jnp.asarray(src_sw),
-        paths=jnp.asarray(flows.paths), n_paths=jnp.asarray(flows.n_paths),
+        paths=jnp.asarray(paths_np), n_paths=jnp.asarray(flows.n_paths),
         spray_choice=jnp.asarray(spray.astype(np.int32)),
         path_len=jnp.asarray(flows.path_len, jnp.float32),
         is_victim=jnp.asarray(flows.is_victim),
         fixed_choice=jnp.asarray(flows.fixed_choice),
-        src_id=jnp.asarray(flows.src_id, jnp.int32),
+        src_id=jnp.asarray(src_dense.astype(np.int32)),
         flow_job=jnp.asarray(flows.flow_job, jnp.int32),
         flow_phase=jnp.asarray(flows.flow_phase, jnp.int32),
         n_phases=jnp.asarray(flows.n_phases, jnp.int32),
         phase_gap=jnp.asarray(flows.phase_gap, jnp.float32),
-        L=L, n_sw=n_sw, n_src=int(flows.src_id.max()) + 1, routing=routing,
+        L=L, n_sw=n_sw, n_src=n_src, routing=routing,
         n_jobs=flows.n_jobs)
+
+
+# --------------------------------------------------------------------------
+# Geometry padding: heterogeneous topologies in one batch (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometryDims:
+    """Bucket shape every member geometry is padded to. Equal dims (plus
+    equal ``routing``) make FabricGeometry pytrees stackable: the meta
+    fields become identical, so ``jax.vmap`` batches the data fields."""
+
+    n_links: int  # L (sink lives at index n_links)
+    n_flows: int
+    k_max: int
+    max_hops: int
+    n_sw: int
+    n_src: int
+    n_jobs: int
+    n_phases: int
+
+
+def geometry_dims(geom: FabricGeometry) -> GeometryDims:
+    return GeometryDims(
+        n_links=geom.L, n_flows=geom.n_flows,
+        k_max=int(geom.paths.shape[1]), max_hops=int(geom.paths.shape[2]),
+        n_sw=geom.n_sw, n_src=geom.n_src, n_jobs=geom.n_jobs,
+        n_phases=int(geom.phase_gap.shape[1]))
+
+
+def bucket_dims(geoms: Sequence[FabricGeometry],
+                round_up=None) -> GeometryDims:
+    """Elementwise max over member dims, optionally rounded up (the
+    bucket-size policy — bench rounds to powers of two so different cell
+    sets resolve to the same bucket shape and reuse compiles)."""
+    dims = [geometry_dims(g) for g in geoms]
+    out = {}
+    for f in dataclasses.fields(GeometryDims):
+        v = max(getattr(d, f.name) for d in dims)
+        out[f.name] = round_up(v) if round_up is not None else v
+    return GeometryDims(**out)
+
+
+def pad_geometry(geom: FabricGeometry, dims: GeometryDims) -> FabricGeometry:
+    """Pad one geometry to a bucket shape with provably inert padding.
+
+    Padding rows are constructed so the padded run is *bit-identical* to
+    the unpadded run of the same cell (tests/test_grid.py):
+
+    * pad links ([L, n_links)) are referenced by no path and see zero
+      arrival, so their queues stay at exactly 0.0;
+    * pad flows carry a sink-only path, zero path length and ``is_victim
+      == False``; their byte budget (SimParams) must be 0, which keeps
+      them out of ``alive`` forever — they inject 0.0 into every scatter;
+    * pad jobs have ``n_phases == 1`` and no member flows; their phase
+      counter free-runs without touching any real job's barrier;
+    * pad switches/sources are referenced by no link/flow.
+
+    The old sink (index ``geom.L``) is remapped to the new sink
+    (``dims.n_links``) everywhere in the path table.
+    """
+    cur = geometry_dims(geom)
+    for f in dataclasses.fields(GeometryDims):
+        if getattr(dims, f.name) < getattr(cur, f.name):
+            raise ValueError(
+                f"pad_geometry: {f.name}={getattr(dims, f.name)} < "
+                f"current {getattr(cur, f.name)}")
+    L_old, L_new = geom.L, dims.n_links
+    F, J = dims.n_flows, dims.n_jobs
+
+    paths = np.asarray(geom.paths)
+    paths = np.where(paths >= L_old, L_new, paths).astype(np.int32)
+    padded_paths = np.full((F, dims.k_max, dims.max_hops), L_new, np.int32)
+    padded_paths[: paths.shape[0], : paths.shape[1], : paths.shape[2]] = paths
+
+    path_len = np.zeros((F, dims.k_max), np.float32)
+    pl = np.asarray(geom.path_len)
+    path_len[: pl.shape[0], : pl.shape[1]] = pl
+
+    caps_pad = np.full((L_new + 1,), np.inf, np.float32)
+    caps_pad[:L_old] = np.asarray(geom.caps_pad)[:L_old]
+    caps_finite = np.ones((L_new + 1,), np.float32)
+    caps_finite[:L_old] = np.asarray(geom.caps_finite)[:L_old]
+    dst_sw = np.zeros((L_new + 1,), np.int32)
+    dst_sw[:L_old] = np.asarray(geom.dst_sw)[:L_old]
+    src_sw = np.zeros((L_new + 1,), np.int32)
+    src_sw[:L_old] = np.asarray(geom.src_sw)[:L_old]
+
+    n_phases = pad_rows(np.asarray(geom.n_phases), J, 1)
+    phase_gap = np.zeros((J, dims.n_phases), np.float32)
+    pg = np.asarray(geom.phase_gap)
+    phase_gap[: pg.shape[0], : pg.shape[1]] = pg
+
+    return FabricGeometry(
+        caps_pad=jnp.asarray(caps_pad), caps_finite=jnp.asarray(caps_finite),
+        dst_sw=jnp.asarray(dst_sw), src_sw=jnp.asarray(src_sw),
+        paths=jnp.asarray(padded_paths),
+        n_paths=jnp.asarray(pad_rows(np.asarray(geom.n_paths), F, 1)),
+        spray_choice=jnp.asarray(pad_rows(np.asarray(geom.spray_choice), F, 0)),
+        path_len=jnp.asarray(path_len),
+        is_victim=jnp.asarray(pad_rows(np.asarray(geom.is_victim), F, False)),
+        fixed_choice=jnp.asarray(pad_rows(np.asarray(geom.fixed_choice), F, 0)),
+        src_id=jnp.asarray(pad_rows(np.asarray(geom.src_id), F,
+                                 dims.n_src - 1)),
+        flow_job=jnp.asarray(pad_rows(np.asarray(geom.flow_job), F, J - 1)),
+        flow_phase=jnp.asarray(pad_rows(np.asarray(geom.flow_phase), F, 0)),
+        n_phases=jnp.asarray(n_phases), phase_gap=jnp.asarray(phase_gap),
+        L=L_new, n_sw=dims.n_sw, n_src=dims.n_src, routing=geom.routing,
+        n_jobs=J)
+
+
+def stack_geometries(geoms: Sequence[FabricGeometry]) -> FabricGeometry:
+    """Stack same-shape geometries into one batched pytree (leading cell
+    axis on every data field). All meta fields — including ``routing`` —
+    must agree; pad to a common :class:`GeometryDims` first."""
+    metas = {(g.L, g.n_sw, g.n_src, g.routing, g.n_jobs) for g in geoms}
+    if len(metas) != 1:
+        raise ValueError(f"cannot stack geometries with differing meta "
+                         f"fields: {sorted(metas)}")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *geoms)
 
 
 # --------------------------------------------------------------------------
@@ -338,6 +505,18 @@ def _cc_update(p: SimParams, c, a, fmark, fstrength, can_dec):
 
 
 def step(geom: FabricGeometry, p: SimParams, state):
+    return _step_impl(geom, p, state, with_aux=False)
+
+
+def step_debug(geom: FabricGeometry, p: SimParams, state):
+    """Like :func:`step` but also returns an aux dict of internal rates
+    (injection, per-stage link loads/served rates, effective capacities)
+    for the invariant test suite. The state update is the identical
+    computation — the aux branch only adds read-only observers."""
+    return _step_impl(geom, p, state, with_aux=True)
+
+
+def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
     dt = p.dt
     # aggressor envelope: traceable function of sim time (no host callback)
     env_t = envelope_at(p.env, state["t"])
@@ -415,6 +594,7 @@ def step(geom: FabricGeometry, p: SimParams, state):
     # longer floods transit queues with phantom demand.
     r = inject
     arrival = jnp.zeros((geom.L + 1,), jnp.float32)
+    served_stage_max = jnp.zeros((geom.L + 1,), jnp.float32)
     for h in range(plinks.shape[1]):
         lk = plinks[:, h]
         contrib = r * valid[:, h]
@@ -422,6 +602,12 @@ def step(geom: FabricGeometry, p: SimParams, state):
         arrival = arrival + load
         over = jnp.maximum(load / caps_eff, 1.0)
         r = jnp.where(valid[:, h], r / over[lk], r)
+        if with_aux:
+            # post-division (served) rate this stage puts on each link —
+            # FIFO fluid sharing guarantees it never exceeds caps_eff
+            served = jnp.zeros((geom.L + 1,), jnp.float32).at[lk].add(
+                r * valid[:, h])
+            served_stage_max = jnp.maximum(served_stage_max, served)
     a = r  # achieved end-to-end rate
     q = jnp.clip(state["q"] + (arrival * (1.0 + p.burst_jitter)
                                - caps_eff) * dt,
@@ -500,6 +686,11 @@ def step(geom: FabricGeometry, p: SimParams, state):
                  "thresh": thresh, "last_dec": last_dec,
                  "ph": ph_next, "gap": gap, "it": it, "t_done": t_done,
                  "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
+    if with_aux:
+        aux = {"inject": inject, "achieved": a, "arrival": arrival,
+               "served_stage_max": served_stage_max, "caps_eff": caps_eff,
+               "active": active, "advance": advance, "wrap": wrap}
+        return new_state, vict_goodput, aux
     return new_state, vict_goodput
 
 
@@ -537,6 +728,7 @@ def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
 @partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride"))
 def run_cell(geom: FabricGeometry, p: SimParams, n_iters,
              *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8):
+    TRACE_COUNTS["run_cell"] += 1
     return _run_cell(geom, p, n_iters, chunk, max_chunks, stride)
 
 
@@ -546,9 +738,30 @@ def run_cells(geom: FabricGeometry, params: SimParams, n_iters,
     """Batched engine: ``params`` has a leading cell axis on every leaf.
     One compile serves the whole grid; all cells advance in lockstep until
     the slowest finishes."""
+    TRACE_COUNTS["run_cells"] += 1
     return jax.vmap(
         lambda pp: _run_cell(geom, pp, n_iters, chunk, max_chunks, stride)
     )(params)
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride"))
+def run_cells_hetero(geoms: FabricGeometry, params: SimParams, n_iters,
+                     *, chunk: int = 2048, max_chunks: int = 98,
+                     stride: int = 8):
+    """Scale-batched engine: ``geoms`` is a stack of bucket-padded
+    geometries (leading axis = topology cell) and ``params`` carries TWO
+    leading axes — (topology cell, sub-cell) — so a whole
+    (system x n_nodes) x (size x profile) grid runs in one compile.
+    The nested vmap closes each geometry over its own sub-cell row, so
+    path tables are not replicated per sub-cell."""
+    TRACE_COUNTS["run_cells_hetero"] += 1
+
+    def one_geom(g, ps):
+        return jax.vmap(
+            lambda pp: _run_cell(g, pp, n_iters, chunk, max_chunks, stride)
+        )(ps)
+
+    return jax.vmap(one_geom)(geoms, params)
 
 
 # --------------------------------------------------------------------------

@@ -30,6 +30,10 @@ class Topology:
     link_src_switch: np.ndarray  # (L,) int id of the switch feeding each link
     meta: dict
 
+    @property
+    def n_links(self) -> int:
+        return len(self.caps)
+
     def paths(self, src: int, dst: int) -> List[List[int]]:
         if src == dst:
             return [[]]
@@ -92,7 +96,8 @@ def leaf_spine(n_nodes: int, n_leaf: int = 2, n_spine: int = 2,
     """Nanjing lab: 2-leaf / 2-spine 200GE, ``n_parallel`` uplinks per
     leaf-spine pair (NSLB exploits the multiple path configurations)."""
     b = _Builder()
-    per_leaf = n_nodes // n_leaf
+    # ceil so any node count maps to a valid leaf (matches fat_tree)
+    per_leaf = (n_nodes + n_leaf - 1) // n_leaf
     for i in range(n_nodes):
         lf = ("leaf", i // per_leaf)
         b.add(_h(i), lf, host_gbit)
@@ -340,3 +345,29 @@ def torus2d(nx: int, ny: int, link_gbit: float = 400.0,
         return [walk(src, dst)]
 
     return b.finish(name, n, path_fn, {"nx": nx, "ny": ny})
+
+
+# --------------------------------------------------------------------------
+# Family registry: build any topology family by name at any node count.
+# The scale-batched engine (bench.run_scale_grid) pads geometries of
+# different families/scales to one bucket shape, so heterogeneous
+# topologies stack under one vmap; this registry is how scenario builders
+# and the property-test suite sample families generically.
+# --------------------------------------------------------------------------
+
+FAMILIES: Dict[str, Callable[..., Topology]] = {
+    "single_switch": single_switch,
+    "leaf_spine": leaf_spine,
+    "fat_tree": fat_tree,
+    "dragonfly": dragonfly,
+    "dragonfly_plus": dragonfly_plus,
+}
+
+
+def make_family(family: str, n_nodes: int, **kwargs) -> Topology:
+    """Build one named topology family at ``n_nodes`` (kwargs forwarded
+    to the family builder)."""
+    if family not in FAMILIES:
+        raise KeyError(f"unknown topology family {family!r}; "
+                       f"known: {sorted(FAMILIES)}")
+    return FAMILIES[family](n_nodes, **kwargs)

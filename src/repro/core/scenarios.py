@@ -34,7 +34,13 @@ class Grid:
     ``phased=True`` lowers the victim's step schedule into barrier-gated
     phases; ``jobs`` replaces the victim/aggressor split with an explicit
     multi-job program (job 0 is the measured primary; jobs without nodes
-    get an interleaved share of the allocation)."""
+    get an interleaved share of the allocation).
+
+    ``cells`` turns the grid *scale-batched*: a tuple of ``(system,
+    n_nodes)`` pairs — heterogeneous node counts and topology families —
+    that run through bench.run_scale_grid (geometries padded into
+    buckets, one compile per bucket). ``system``/``n_nodes`` are ignored
+    when ``cells`` is set (keep them as a label/0)."""
 
     system: str
     n_nodes: int
@@ -44,6 +50,7 @@ class Grid:
     victim: str = "ring_allgather"
     phased: bool = False
     jobs: Tuple[JobSpec, ...] = ()
+    cells: Tuple[Tuple[str, int], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,8 +82,10 @@ def get(name: str, quick: bool = False) -> Scenario:
 
 
 def run_grid_spec(scenario: Scenario, grid: Grid) -> List[bench.BenchResult]:
+    system = list(grid.cells) if grid.cells \
+        else systems.get_system(grid.system)
     return bench.run_grid(
-        systems.get_system(grid.system), grid.n_nodes, grid.victim,
+        system, grid.n_nodes, grid.victim,
         grid.aggressor, grid.sizes, grid.profiles,
         n_iters=scenario.n_iters, warmup=scenario.warmup,
         phased=grid.phased, jobs=list(grid.jobs) or None)
@@ -157,17 +166,27 @@ def fig6_bursty(quick: bool = False) -> Scenario:
 
 @register
 def fig7_fig8_scale(quick: bool = False) -> Scenario:
-    cells = (("cresco8", 64), ("cresco8", 128), ("lumi", 256))
+    """Scale-batched since the geometry-bucket engine: the whole
+    (system x n_nodes) ladder rides one run_scale_grid call per
+    aggressor — one compile per geometry bucket instead of one per
+    scale (quick: 2 scales x 2 systems, the CI smoke)."""
+    cells = (("cresco8", 64), ("cresco8", 128),
+             ("lumi", 64), ("lumi", 128)) if quick else \
+        (("cresco8", 64), ("cresco8", 128), ("lumi", 256))
     sizes = (2 * MiB,) if quick else (32 * KiB, 2 * MiB)
     bursts = (2.0,) if quick else BURSTS_MS
     pauses = (0.2, 8.0) if quick else PAUSES_MS
-    grids = tuple(Grid(s, n, a, sizes, _bursty_grid(bursts, pauses))
-                  for (s, n) in cells for a in FIG5_AGGRESSORS)
+    # quick keeps the incast grid only — that is the Fig. 7 claim (64 vs
+    # 128-node congestion-tree width) and the CI smoke budget
+    aggrs = ("incast",) if quick else FIG5_AGGRESSORS
+    grids = tuple(Grid("scale", 0, a, sizes, _bursty_grid(bursts, pauses),
+                       cells=cells)
+                  for a in aggrs)
     return Scenario(
         "fig7_fig8_scale",
         "Paper Figs. 7-8: bursty congestion at larger scale (CRESCO8 "
-        "64/128 nodes, LUMI 256 nodes).",
-        grids, n_iters=20, warmup=4)
+        "64/128 nodes, LUMI 256 nodes), scale-batched.",
+        grids, n_iters=12 if quick else 20, warmup=3 if quick else 4)
 
 
 @register
@@ -337,6 +356,65 @@ def multi_job_mix(quick: bool = False) -> Scenario:
         "incast, and N-tenant fair-share mixes (job 0 measured; "
         "background tenants envelope-gated).",
         grids, n_iters=12, warmup=3)
+
+
+# --------------------------------------------------------------------------
+# Scale-batched scenario families (heterogeneous topologies in one vmap)
+# --------------------------------------------------------------------------
+
+
+@register
+def scale_sweep(quick: bool = False) -> Scenario:
+    """The paper's central axis — how congestion impact changes with
+    system size — as ONE batched sweep per aggressor: an EDR/HDR/NDR/
+    Slingshot x {16..512}-node ladder of (system, n_nodes) cells padded
+    into geometry buckets. Jha et al. show congestion trees are a scale
+    phenomenon; this is the grid axis that used to recompile per cell."""
+    if quick:
+        cells = tuple((s, n) for s in ("cresco8", "lumi")
+                      for n in (16, 64))
+        sizes: Tuple[float, ...] = (2 * MiB,)
+        profiles: Tuple[Profile, ...] = (cong.steady(),)
+        aggrs = ("alltoall",)
+    else:
+        cells = tuple((s, n)
+                      for s in ("haicgu_ib", "leonardo", "cresco8", "lumi")
+                      for n in (16, 32, 64, 128, 256, 512))
+        sizes = (32 * KiB, 2 * MiB)
+        profiles = (cong.steady(), cong.bursty(2e-3, 2e-3))
+        aggrs = FIG5_AGGRESSORS
+    grids = tuple(Grid("scale", 0, a, sizes, profiles, cells=cells)
+                  for a in aggrs)
+    return Scenario(
+        "scale_sweep",
+        "Cross-scale congestion: EDR/HDR/NDR/Slingshot x 16..512 nodes "
+        "per aggressor, scale-batched (one compile per geometry bucket).",
+        grids, n_iters=15, warmup=3)
+
+
+@register
+def mixed_topology(quick: bool = False) -> Scenario:
+    """Topology-family shootout at matched allocation size: single-switch,
+    leaf-spine, blocking fat-tree, Dragonfly and Dragonfly+ cells stacked
+    in one scale-batched call, so the ratio spread isolates what the
+    *fabric structure* (path diversity, taper, global links) contributes
+    under the identical victim/aggressor program."""
+    n = 16 if quick else 32
+    names = ("haicgu_ib", "cresco8", "lumi") if quick else \
+        ("haicgu_ib", "nanjing_nslb", "cresco8", "lumi", "leonardo")
+    cells = tuple((s, n) for s in names)
+    sizes = (2 * MiB,) if quick else (32 * KiB, 2 * MiB)
+    profiles = (cong.steady(),) if quick else \
+        (cong.steady(), cong.bursty(2e-3, 2e-3))
+    aggrs = ("incast",) if quick else FIG5_AGGRESSORS
+    grids = tuple(Grid("mixed", 0, a, sizes, profiles, cells=cells)
+                  for a in aggrs)
+    return Scenario(
+        "mixed_topology",
+        "Heterogeneous topology families (single-switch / leaf-spine / "
+        "fat-tree / dragonfly / dragonfly+) at one scale, batched into "
+        "geometry buckets.",
+        grids, n_iters=15, warmup=3)
 
 
 @register

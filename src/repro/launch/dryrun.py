@@ -10,8 +10,10 @@ import sys  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
-ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                         "artifacts", "dryrun")
+# REPRO_DRYRUN_DIR overrides the artifact directory (test fixtures
+# generate minimal artifacts into a tmpdir this way).
+ARTIFACTS = os.environ.get("REPRO_DRYRUN_DIR") or os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
 
 # Target-hardware constants (TPU v5e-class, per the brief)
 PEAK_FLOPS = 197e12  # bf16 / chip
@@ -20,7 +22,14 @@ LINK_BW = 50e9  # B/s / link ICI
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             variant: str = "") -> dict:
+             variant: str = "", smoke: bool = False) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell and write its
+    roofline/HLO artifact. ``smoke=True`` swaps in the reduced config, a
+    shrunken shape, and the real host mesh — a seconds-scale cell with
+    the identical artifact layout, used by the test fixture that needs a
+    real dryrun artifact without the full 512-device sweep."""
+    import dataclasses as _dc
+
     import jax
 
     jax.config.update("jax_compilation_cache_dir",
@@ -30,7 +39,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     from repro.configs import get_config
     from repro.configs.base import SHAPES
     from repro.launch.hlo_stats import analyze
-    from repro.launch.mesh import make_production_mesh, rules_for
+    from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                                   rules_for)
     from repro.launch.steps import lower_cell
 
     cfg = get_config(arch)
@@ -44,7 +54,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 "reason": "long_500k inapplicable: pure full-attention arch "
                           "(DESIGN.md §6)"}
 
-    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if smoke:
+        cfg = cfg.reduced()
+        shape = _dc.replace(shape, seq_len=min(shape.seq_len, 512),
+                            global_batch=min(shape.global_batch, 8))
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = mesh.devices.size
     rules = rules_for(cfg, mesh)
 
@@ -58,6 +74,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     out = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "n_devices": n_dev, "status": "ok",
            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2)}
+    if smoke:
+        out["smoke"] = True
 
     try:
         ma = compiled.memory_analysis()
@@ -123,10 +141,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     return out
 
 
-def cell_path(arch, shape, mesh_kind, variant=""):
+def cell_path(arch, shape, mesh_kind, variant="", smoke=False):
     base = ARTIFACTS if not variant else ARTIFACTS + "_" + variant
     os.makedirs(base, exist_ok=True)
-    return os.path.join(base, f"{arch}__{shape}__{mesh_kind}.json")
+    # smoke cells get their own filename so they can never shadow (or be
+    # resumed as) a real production artifact of the same cell
+    suffix = "__smoke" if smoke else ""
+    return os.path.join(base, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
 
 
 def main():
@@ -137,6 +158,10 @@ def main():
     p.add_argument("--variant", default="",
                    help="optimization variant from configs/opt_variants.py; "
                         "results go to artifacts/dryrun_<variant>/")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config + shrunken shape on the host "
+                        "mesh: a seconds-scale cell with the same "
+                        "artifact layout (test fixtures)")
     p.add_argument("--all", action="store_true",
                    help="sweep all (arch x shape x mesh) cells in "
                         "subprocesses (resumable)")
@@ -183,11 +208,13 @@ def main():
 
     assert args.arch and args.shape
     try:
-        out = run_cell(args.arch, args.shape, args.mesh, args.variant)
+        out = run_cell(args.arch, args.shape, args.mesh, args.variant,
+                       smoke=args.smoke)
     except Exception:
         traceback.print_exc()
         sys.exit(1)
-    path = cell_path(args.arch, args.shape, args.mesh, args.variant)
+    path = cell_path(args.arch, args.shape, args.mesh, args.variant,
+                     smoke=args.smoke)
     with open(path, "w") as f:
         json.dump(out, f, indent=1, default=str)
     print(json.dumps({k: out[k] for k in ("arch", "shape", "mesh", "status")

@@ -1,5 +1,9 @@
 """Batched-engine tests: run_grid/vmap vs per-cell equivalence, envelope
-fixed points and duty cycles, CC-kind-as-data dispatch, dt quantization."""
+fixed points and duty cycles, CC-kind-as-data dispatch, dt quantization,
+and the scale-batched geometry engine (padding bit-identity, bucket
+compile counts, cross-scale ratio agreement)."""
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -38,6 +42,127 @@ def test_grid_baseline_shared_across_profiles():
                           n_iters=10, warmup=2)
     t_u = {r.t_uncongested_s for r in grid}
     assert len(t_u) == 1
+
+
+# --------------------------------------------------------------------------
+# Scale-batched geometry engine: padding is provably inert
+# --------------------------------------------------------------------------
+
+RUN_KW = dict(chunk=512, max_chunks=40, stride=8)
+
+
+def _run_outputs(geom, params, n_iters=8):
+    out = sim_lib.run_cell(geom, params, jnp.asarray(n_iters, jnp.int32),
+                           **RUN_KW)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _assert_bit_identical(out0, out1, label):
+    """Real-prefix outputs of the padded run must equal the unpadded run
+    bit for bit (padded jobs append extra t_done/it rows — sliced off)."""
+    for k in ("t_done", "it", "qd_acc", "t", "trace", "chunks"):
+        a0, a1 = out0[k], out1[k]
+        if k in ("t_done", "it"):
+            a1 = a1[: a0.shape[0]]
+        assert np.array_equal(a0, a1), (label, k)
+
+
+@pytest.mark.parametrize("sysn,n_nodes", [("cresco8", 16),
+                                          ("nanjing_ecmp", 8)])
+def test_padded_geometry_bit_identical(sysn, n_nodes):
+    """A cell padded to a strictly larger bucket shape (every dim grown,
+    incl. flows/jobs/links/switches) reproduces the unpadded run exactly."""
+    sysp = systems.get_system(sysn)
+    case = bench.build_case(sysp, n_nodes, "ring_allgather", "alltoall")
+    dt = bench.choose_dt(case.topo, case.n_victims, 2 << 20, case.lat())
+    p = case.cell_params(2 << 20, cong.steady(), dt)
+    out0 = _run_outputs(case.geom, p)
+
+    cur = sim_lib.geometry_dims(case.geom)
+    dims = sim_lib.GeometryDims(
+        n_links=cur.n_links + 37, n_flows=cur.n_flows + 13,
+        k_max=cur.k_max + 2, max_hops=cur.max_hops + 3,
+        n_sw=cur.n_sw + 5, n_src=cur.n_src + 4, n_jobs=cur.n_jobs + 2,
+        n_phases=cur.n_phases + 1)
+    padded = sim_lib.pad_geometry(case.geom, dims)
+    pp = case.cell_params(2 << 20, cong.steady(), dt,
+                          n_flows=dims.n_flows)
+    out1 = _run_outputs(padded, pp)
+    _assert_bit_identical(out0, out1, sysn)
+
+
+def test_pruned_geometry_bit_identical():
+    """Link pruning (machine topology -> allocation-touched links) is a
+    pure index remap: flow-visible outputs match the unpruned geometry
+    bit for bit."""
+    sysp = systems.get_system("cresco8")
+    topo = bench.machine_topology(sysp)
+    nodes = bench.allocate(sysp, 12)
+    vidx, aidx = cong.interleaved_split(12)
+    flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx],
+                               "ring_allgather", "incast", 2 << 20,
+                               k_max=sysp.k_max)
+    dt = 4e-6
+    outs = {}
+    for prune in (False, True):
+        geom = sim_lib.make_geometry(topo, flows, routing=sysp.routing,
+                                     prune=prune)
+        params = sim_lib.make_params(
+            sysp.cc, dt=dt, bytes_per_iter=flows.bytes_per_iter,
+            host_caps=flows.host_caps, env=cong.steady().params())
+        outs[prune] = _run_outputs(geom, params)
+    assert outs[True]["t_done"].shape == outs[False]["t_done"].shape
+    _assert_bit_identical(outs[False], outs[True], "prune")
+
+
+def test_scale_grid_matches_sequential_one_compile_per_bucket():
+    """The acceptance sweep: 4 scales x 2 systems through run_grid's
+    scale-batched path — at most one simulator compile per geometry
+    bucket (both systems route adaptively -> exactly one bucket), and
+    ratios matching the sequential per-scale loop."""
+    cells = [(s, n) for s in ("cresco8", "lumi") for n in (8, 12, 16, 24)]
+    sizes = [1 << 20]
+    profiles = [cong.steady()]
+    before = sim_lib.trace_count("run_cells_hetero")
+    batched = bench.run_grid(cells, 0, "ring_allgather", "incast", sizes,
+                             profiles, n_iters=8, warmup=2)
+    # one bucket -> at most one compile (0 if an identical bucket shape
+    # is already warm in this session's JIT cache)
+    assert sim_lib.trace_count("run_cells_hetero") - before <= 1
+    assert len(batched) == len(cells) * len(sizes) * len(profiles)
+
+    seq = []
+    for s, n in cells:
+        seq += bench.run_grid(systems.get_system(s), n, "ring_allgather",
+                              "incast", sizes, profiles, n_iters=8,
+                              warmup=2)
+    for rb, rs in zip(batched, seq):
+        assert (rb.system, rb.n_nodes, rb.vector_bytes, rb.profile) \
+            == (rs.system, rs.n_nodes, rs.vector_bytes, rs.profile)
+        assert np.isclose(rb.t_uncongested_s, rs.t_uncongested_s,
+                          rtol=1e-6), (rb.system, rb.n_nodes)
+        assert np.isclose(rb.t_congested_s, rs.t_congested_s, rtol=1e-6)
+        assert np.isclose(rb.ratio, rs.ratio, rtol=1e-6)
+
+    # a second sweep with the same bucket shape reuses the compile
+    before = sim_lib.trace_count("run_cells_hetero")
+    bench.run_grid(cells, 0, "ring_allgather", "incast", sizes, profiles,
+                   n_iters=8, warmup=2)
+    assert sim_lib.trace_count("run_cells_hetero") - before == 0
+
+
+def test_mixed_routing_buckets_split():
+    """Fixed-routing and adaptive-routing systems cannot share a bucket
+    (routing is compile-time meta): a mixed cell list costs exactly one
+    compile per routing class, and every cell still reports results."""
+    cells = [("haicgu_ib", 8), ("cresco8", 8)]
+    before = sim_lib.trace_count("run_cells_hetero")
+    rows = bench.run_scale_grid(cells, "ring_allgather", "incast",
+                                [1 << 20], [cong.steady()], n_iters=6,
+                                warmup=1)
+    assert sim_lib.trace_count("run_cells_hetero") - before <= 2
+    assert [r.system for r in rows] == ["haicgu_ib", "cresco8"]
+    assert all(0.0 < r.ratio <= 1.1 for r in rows)
 
 
 # --------------------------------------------------------------------------

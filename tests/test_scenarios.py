@@ -1,0 +1,78 @@
+"""Scenario-registry completeness: every registered family must build
+its cases (quick and full), run one shrunk cell end-to-end through its
+grid path, and emit exactly the cache-key columns the benchmark drivers
+and the CSV cache read (benchmarks.common.expected_grid_keys is the
+shared source of truth — this is the drift catcher for the CSV layout
+PR 2 had to patch around)."""
+import dataclasses
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import SCENARIO_KEYS, expected_grid_keys  # noqa: E402
+from repro.core import scenarios as scen  # noqa: E402
+from repro.core.fabric import systems  # noqa: E402
+
+GRID_DRIVER_COLS = {"ratio", "t_uncongested_us", "t_congested_us"}
+
+
+def test_every_scenario_builds_quick_and_full():
+    assert scen.SCENARIOS, "registry is empty"
+    for name in scen.SCENARIOS:
+        for quick in (False, True):
+            s = scen.get(name, quick)
+            assert s.name == name
+            assert s.grids or s.points or s.microbench_sizes, name
+            for grid in s.grids:
+                assert grid.sizes and grid.profiles, (name, grid)
+                for sysname, n in grid.cells or ((grid.system,
+                                                  grid.n_nodes),):
+                    if grid.cells:
+                        assert sysname in systems.PRESETS, (name, sysname)
+                        assert int(n) >= 2, (name, sysname, n)
+
+
+def _shrunk(scenario):
+    """One quick cell of the scenario's first grid (scale-batched grids
+    keep two cells so the batched path itself is exercised)."""
+    grid = scenario.grids[0]
+    grid = dataclasses.replace(grid, sizes=grid.sizes[:1],
+                               profiles=grid.profiles[:1],
+                               cells=grid.cells[:2])
+    return dataclasses.replace(scenario, n_iters=6, warmup=1,
+                               grids=(grid,)), grid
+
+
+@pytest.mark.parametrize("name", sorted(scen.SCENARIOS))
+def test_registered_family_runs_and_emits_driver_columns(name):
+    scenario = scen.get(name, quick=True)
+    if not scenario.grids:
+        # points/microbench families: the matching driver interprets the
+        # tuples — validate the references they carry
+        assert scenario.points or scenario.microbench_sizes
+        if name == "fig3_sawtooth":
+            assert all(s in systems.PRESETS for s, _ in scenario.points)
+        if name == "fig4_nslb":
+            assert {m for m, _ in scenario.points} <= {"nslb", "ecmp"}
+        return
+
+    scenario, grid = _shrunk(scenario)
+    rows = [scen.result_row(grid, r)
+            for r in scen.run_grid_spec(scenario, grid)]
+    assert rows, name
+
+    # cache keys: exactly what benchmarks.common would expect, in order
+    got = [tuple(str(row[k]) for k in SCENARIO_KEYS) for row in rows]
+    assert got == expected_grid_keys(grid), name
+
+    for row in rows:
+        assert GRID_DRIVER_COLS <= set(row), (name, sorted(row))
+        assert 0.0 < float(row["ratio"]) <= 1.2, (name, row)
+        prof = grid.profiles[0]
+        if prof.kind in ("bursty", "random"):
+            assert "burst_ms" in row and "pause_ms" in row, name
+        if grid.jobs:
+            assert "job_times" in row, name

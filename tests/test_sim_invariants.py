@@ -1,0 +1,231 @@
+"""Property-based simulator invariants under randomized programs and
+geometries (hypothesis, or the deterministic stub in conftest.py):
+
+* queues stay within [0, qmax] and the sink queue stays empty,
+* per-link served rate never exceeds the effective capacity (FIFO fluid
+  sharing caps every stage at caps_eff),
+* NIC injection never exceeds the source's host link capacity,
+* per-job phase counters advance monotonically (0 or +1 mod n_phases)
+  and completed-iteration counters never decrease,
+* total delivered bytes equal the program's wire bytes at completion
+  (up to one dt of discretization overshoot per phase),
+* program padding (traffic.pad_program via build_program_flowset
+  pad_to=...) is inert: bit-identical outputs through the full engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import congestion as cong, traffic
+from repro.core.fabric import cc as cc_lib, simulator as sim
+from repro.core.fabric import topology as topo_lib
+from repro.core.fabric.cc import ROUTE_ADAPTIVE, ROUTE_FIXED
+
+FAMILIES = sorted(topo_lib.FAMILIES)
+COLLECTIVES = ("ring_allgather", "ring_allreduce", "alltoall", "incast")
+CCS = {"dcqcn": cc_lib.dcqcn, "ib": lambda: cc_lib.infiniband("hdr"),
+       "slingshot": cc_lib.slingshot, "ai_ecn": cc_lib.ai_ecn}
+
+_step_debug = jax.jit(sim.step_debug)
+
+
+def _build(family, n_nodes, coll, cc_name, routing, vector_bytes,
+           aggr="incast"):
+    topo = topo_lib.make_family(family, n_nodes)
+    vidx, aidx = cong.interleaved_split(n_nodes)
+    nodes = np.arange(n_nodes)
+    flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx], coll, aggr,
+                               vector_bytes, phased=True)
+    cc = CCS[cc_name]()
+    geom = sim.make_geometry(topo, flows, routing=routing)
+    dt = 2e-6
+    params = sim.make_params(cc, dt=dt, bytes_per_iter=flows.bytes_per_iter,
+                             host_caps=flows.host_caps,
+                             env=cong.steady().params())
+    return topo, flows, geom, params
+
+
+@settings(max_examples=8, deadline=None)
+@given(family=st.sampled_from(FAMILIES),
+       n_nodes=st.integers(4, 12),
+       coll=st.sampled_from(COLLECTIVES),
+       cc_name=st.sampled_from(sorted(CCS)),
+       routing=st.sampled_from([ROUTE_FIXED, ROUTE_ADAPTIVE]),
+       vector_bytes=st.floats(64 * 1024, 16 * 1024 * 1024))
+def test_step_invariants(family, n_nodes, coll, cc_name, routing,
+                         vector_bytes):
+    """Queues bounded, service capped by capacity, injection capped by
+    the NIC, phase/iteration counters monotone — at every step."""
+    topo, flows, geom, params = _build(family, n_nodes, coll, cc_name,
+                                       routing, vector_bytes)
+    qmax = float(params.qmax_bytes)
+    state = sim.init_state(geom, params)
+    # max host-link rate per source id (pad-safe: sources with no flows
+    # never appear in src_id)
+    src_cap = np.zeros(geom.n_src)
+    np.maximum.at(src_cap, np.asarray(geom.src_id),
+                  np.asarray(params.host_caps))
+    prev_ph = np.asarray(state["ph"]).copy()
+    prev_it = np.asarray(state["it"]).copy()
+    prev_t = float(state["t"])
+    n_phases = np.asarray(geom.n_phases)
+    for _ in range(150):
+        state, _, aux = _step_debug(geom, params, state)
+        q = np.asarray(state["q"])
+        assert (q >= 0.0).all() and (q <= qmax * (1 + 1e-5)).all()
+        assert q[geom.L] == 0.0
+        served = np.asarray(aux["served_stage_max"])
+        caps_eff = np.asarray(aux["caps_eff"])
+        assert (served[: geom.L]
+                <= caps_eff[: geom.L] * (1 + 1e-3) + 1.0).all()
+        inj = np.asarray(aux["inject"])
+        assert (inj >= -1e-6).all()
+        src_load = np.zeros(geom.n_src)
+        np.add.at(src_load, np.asarray(geom.src_id), inj)
+        assert (src_load <= src_cap * (1 + 1e-3) + 1.0).all()
+        # end-to-end achieved rate can only shrink along the path
+        assert (np.asarray(aux["achieved"]) <= inj * (1 + 1e-5) + 1.0).all()
+        ph, it = np.asarray(state["ph"]), np.asarray(state["it"])
+        step_fwd = (ph - prev_ph) % np.maximum(n_phases, 1)
+        assert np.isin(step_fwd, (0, 1)).all(), (prev_ph, ph)
+        assert (it >= prev_it).all()
+        assert float(state["t"]) > prev_t
+        prev_ph, prev_it, prev_t = ph.copy(), it.copy(), float(state["t"])
+
+
+@settings(max_examples=6, deadline=None)
+@given(family=st.sampled_from(FAMILIES),
+       n_nodes=st.integers(4, 10),
+       coll=st.sampled_from(COLLECTIVES),
+       vector_bytes=st.floats(256 * 1024, 8 * 1024 * 1024))
+def test_delivered_bytes_match_program(family, n_nodes, coll, vector_bytes):
+    """Run one full program iteration of a phased single-job victim (no
+    aggressor): the time-integral of achieved rates must equal the
+    program's total wire bytes, within one dt of overshoot per phase
+    boundary per flow."""
+    topo = topo_lib.make_family(family, n_nodes)
+    nodes = np.arange(n_nodes)
+    flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
+                               phased=True)
+    geom = sim.make_geometry(topo, flows)
+    dt = 1e-6
+    params = sim.make_params(cc_lib.slingshot(), dt=dt,
+                             bytes_per_iter=flows.bytes_per_iter,
+                             host_caps=flows.host_caps,
+                             env=cong.no_congestion().params())
+    state = sim.init_state(geom, params)
+
+    @jax.jit
+    def scan_block(state):
+        def body(carry, _):
+            s, acc = carry
+            s2, _, aux = sim.step_debug(geom, params, s)
+            # accumulate only while the first program iteration is open
+            # (the completing step itself still counts)
+            live = s["it"][0] == 0
+            acc = acc + jnp.where(live, jnp.sum(aux["achieved"]), 0.0)
+            return (s2, acc), None
+        (state2, acc), _ = jax.lax.scan(body, (state, jnp.float32(0.0)),
+                                        None, length=200)
+        return state2, acc
+
+    delivered = 0.0
+    for _ in range(100):  # <= 20k steps
+        state, acc = scan_block(state)
+        delivered += float(acc) * dt
+        if int(np.asarray(state["it"])[0]) >= 1:
+            break
+    else:
+        raise AssertionError("program did not complete in 20k steps")
+    # expected: every flow row delivers its bytes once per phase it is a
+    # member of (wildcard rows re-arm each phase)
+    mult = np.where(np.asarray(flows.flow_phase) < 0,
+                    np.asarray(flows.n_phases)[flows.flow_job], 1)
+    expected = float(np.sum(flows.bytes_per_iter * mult))
+    overshoot = float(np.sum(flows.host_caps * mult)) * dt
+    assert delivered >= expected * (1 - 1e-3) - 1.0
+    assert delivered <= expected + overshoot + 1.0, \
+        (delivered, expected, overshoot)
+
+
+@settings(max_examples=4, deadline=None)
+@given(family=st.sampled_from(FAMILIES),
+       n_nodes=st.integers(4, 10),
+       coll=st.sampled_from(COLLECTIVES),
+       extra_flows=st.integers(1, 40),
+       extra_jobs=st.integers(1, 3))
+def test_program_padding_inert(family, n_nodes, coll, extra_flows,
+                               extra_jobs):
+    """build_program_flowset(pad_to=...) — the program-level padding the
+    geometry buckets ride on — must not perturb the engine at all."""
+    topo = topo_lib.make_family(family, n_nodes)
+    vidx, aidx = cong.interleaved_split(n_nodes)
+    nodes = np.arange(n_nodes)
+    jobs = [traffic.JobSpec("victim", coll, 1 << 20,
+                            nodes=tuple(nodes[vidx]), phased=True),
+            traffic.JobSpec("aggressor", "incast",
+                            nodes=tuple(nodes[aidx]), endless=True,
+                            envelope_gated=True, sweep_bytes=False)]
+    flows0 = cong.build_program_flowset(topo, jobs)
+    pad_to = (flows0.n_flows + extra_flows, flows0.n_jobs + extra_jobs,
+              int(np.max(flows0.n_phases)) + 1)
+    flows1 = cong.build_program_flowset(topo, jobs, pad_to=pad_to)
+    assert flows1.n_flows == pad_to[0] and flows1.n_jobs == pad_to[1]
+
+    outs = []
+    for flows in (flows0, flows1):
+        geom = sim.make_geometry(topo, flows)
+        params = sim.make_params(
+            cc_lib.infiniband("hdr"), dt=2e-6,
+            bytes_per_iter=flows.bytes_per_iter,
+            host_caps=flows.host_caps, env=cong.steady().params())
+        out = sim.run_cell(geom, params, jnp.asarray(5, jnp.int32),
+                           chunk=256, max_chunks=30, stride=8)
+        outs.append({k: np.asarray(v) for k, v in out.items()})
+    for k in ("t_done", "it", "qd_acc", "t", "trace", "chunks"):
+        a0, a1 = outs[0][k], outs[1][k]
+        if k in ("t_done", "it"):
+            a1 = a1[: a0.shape[0]]
+        assert np.array_equal(a0, a1), k
+
+
+def test_pad_program_validates_prefix_exactly():
+    """check_program on a padded program still validates the real jobs
+    exactly (padding rows are invisible to the wire-byte model)."""
+    jobs = (traffic.JobSpec("j", "ring_allreduce", 1 << 20,
+                            nodes=tuple(range(6)), phased=True),)
+    prog = traffic.compile_programs(jobs)
+    padded = traffic.pad_program(prog, n_flows=prog.n_flows + 9,
+                                 n_jobs=len(prog.n_phases) + 1,
+                                 n_phases=int(prog.phase_gap.shape[1]) + 2)
+    traffic.check_program(padded)  # must not raise
+    # and a corrupted prefix must still be caught
+    padded.bytes_per_phase[0] *= 2.0
+    try:
+        traffic.check_program(padded)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("corrupted prefix passed validation")
+
+
+def test_pad_program_rejects_shrinking_and_orphan_flows():
+    jobs = (traffic.JobSpec("j", "ring_allgather", 1 << 20,
+                            nodes=tuple(range(4))),)
+    prog = traffic.compile_programs(jobs)
+    np_flows = prog.n_flows
+    try:
+        traffic.pad_program(prog, n_flows=np_flows - 1, n_jobs=2,
+                            n_phases=1)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("shrinking accepted")
+    try:
+        traffic.pad_program(prog, n_flows=np_flows + 4, n_jobs=1,
+                            n_phases=1)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("orphan pad flows accepted")
