@@ -1,0 +1,174 @@
+"""Mitigation lab driver: search the CC / load-balancing space across a
+multi-scenario panel and report the Pareto frontier + per-fabric winner.
+
+``PYTHONPATH=src python -m benchmarks.mitigation_lab [--quick] [--grad]``
+
+--quick (the CI smoke) runs a small candidate space against the
+2-scenario quick panel and asserts the two headline claims:
+
+* NSLB flat-lines the Fig. 4 leaf-spine cell while ECMP collapses
+  (ratio > 0.9 vs < 0.85 — the paper's Fig. 4 contrast, now produced by
+  ONE geometry with the routing policy swept as traced data);
+* a searched CC config beats the fabric default on at least one bursty
+  scenario without degrading the uncongested baseline, and the AI-ECN
+  upgrade candidate shrinks the CE8850 sawtooth amplitude (Fig. 3 CV).
+
+Exit code is non-zero if a claim fails, so CI catches regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
+                                       POLICY_FLOWLET, POLICY_NSLB)
+from repro.core.mitigation import score, search
+from repro.core.mitigation.search import Candidate
+
+# The CE9855-style firmware upgrade for the CE8850: AI-ECN proportional
+# marking against an adaptive threshold instead of bang-bang DCQCN.
+AI_ECN_UPGRADE = Candidate(
+    cc=(("kind", 3), ("thresh_adapt", 1.0), ("md", 0.85),
+        ("rai_frac", 0.05), ("kmin", 0.1), ("kmax", 0.7)),
+    name="ai_ecn_upgrade")
+
+
+def candidate_space(quick: bool) -> List[Candidate]:
+    """Grid tier: routing policies x CC configs (bounded knobs)."""
+    routing = search.RoutingSpace(
+        policies=(None, POLICY_ECMP, POLICY_NSLB, POLICY_ADAPTIVE,
+                  POLICY_FLOWLET),
+        flowlet_gaps_s=(100e-6,) if quick else (50e-6, 200e-6))
+    cands = [Candidate(policy=r["policy"], flowlet_gap_s=r["flowlet_gap_s"])
+             for r in routing.grid() if r["policy"] is not None]
+    # CC axis (native routing, so fabrics keep their own load balancing).
+    # hol_factor is the congestion-tree isolation knob (finer credit
+    # granularity / per-flow buffering) — the lever behind the paper's
+    # IB-generation ordering (Obs. 2).
+    cc_space = search.CCSpace.of(
+        hol_factor=(0.45, 0.9), md=(0.85,), rai_frac=(0.05,)) if quick \
+        else search.CCSpace.of(md=(0.5, 0.85), rai_frac=(0.02, 0.05),
+                               kmin=(0.15, 0.3), hol_factor=(0.45, 0.9))
+    cands += [Candidate(cc=tuple(sorted(c.items())))
+              for c in cc_space.grid()]
+    cands.append(AI_ECN_UPGRADE)
+    return cands
+
+
+def print_table(scores: List[score.CandidateScore]) -> None:
+    print(f"{'candidate':>38} {'ratio_min':>9} {'ratio_mean':>10} "
+          f"{'aggr Gb/s':>9} {'jain':>6} {'base_rel':>8}")
+    for s in sorted(scores, key=lambda s: -s.ratio_min):
+        print(f"{s.candidate:>38} {s.ratio_min:>9.3f} {s.ratio_mean:>10.3f} "
+              f"{s.aggr_gbps:>9.1f} {s.jain:>6.3f} "
+              f"{s.t_base_worst_rel:>8.3f}")
+
+
+def _cell_ratio(runs, cell_substr: str, cand: str) -> float:
+    vals = [r.ratio for r in runs
+            if cell_substr in r.cell and r.candidate == cand]
+    return min(vals) if vals else float("nan")
+
+
+def main(quick: bool = False, grad: bool = False) -> Dict:
+    t0 = time.time()
+    panel = score.panel_from_scenario(quick=quick)
+    cands = candidate_space(quick)
+    print(f"# mitigation lab: {len(cands) + 1} candidates x "
+          f"{len(panel)} panel scenarios (one vmapped batch)")
+    scores = score.score_table(panel, cands, n_iters=10 if quick else 15,
+                               warmup=2 if quick else 3,
+                               max_steps=120_000 if quick else 200_000)
+    runs = [r for s in scores for r in s.cells]
+    print_table(scores)
+
+    front = score.pareto_frontier(scores)
+    print("\n# Pareto frontier (maximize victim ratio, aggressor goodput, "
+          "fairness):")
+    for s in front:
+        print(f"  {s.candidate}: ratio_min={s.ratio_min:.3f} "
+              f"aggr={s.aggr_gbps:.1f}Gb/s jain={s.jain:.3f}")
+    winner = score.pick_winner(scores)
+    print(f"\n# per-fabric winner (baseline-guarded): {winner.candidate} "
+          f"(ratio_min={winner.ratio_min:.3f})")
+
+    # ---- claim 1: NSLB flat-lines the Fig. 4 leaf-spine cell vs ECMP ----
+    fig4 = "nanjing"
+    r_nslb = _cell_ratio(runs, fig4, "nslb")
+    r_ecmp = _cell_ratio(runs, fig4, "ecmp")
+    ok_fig4 = r_nslb > 0.9 and r_ecmp < 0.85
+    print(f"\n# Fig.4 check: NSLB ratio {r_nslb:.2f} (paper: ~1.0) vs "
+          f"ECMP {r_ecmp:.2f} (paper: ~0.67) -> "
+          f"{'REPRODUCED' if ok_fig4 else 'MISMATCH'}")
+
+    # ---- claim 2: a searched CC config beats the fabric default on a
+    # bursty scenario without degrading the uncongested baseline ----
+    default = next(s for s in scores if s.candidate == "default")
+    bursty_cells = {r.cell for r in default.cells if "bursty" in r.cell}
+    best_cc, best_gain = None, 0.0
+    for s in scores:
+        # CC-axis candidates keep the fabric's native routing — routing
+        # wins are claim 1's business
+        if not (s.candidate.startswith("native|")
+                or s.candidate == AI_ECN_UPGRADE.name):
+            continue
+        if s.t_base_worst_rel > 1.02:
+            continue
+        for cell in bursty_cells:
+            gain = _cell_ratio(runs, cell, s.candidate) \
+                - _cell_ratio(runs, cell, "default")
+            if gain > best_gain:
+                best_cc, best_gain, best_cell = s.candidate, gain, cell
+    ok_cc = best_cc is not None and best_gain > 0.02
+    if ok_cc:
+        print(f"# CC-search check: {best_cc} beats default by "
+              f"+{best_gain:.2f} ratio on {best_cell} with no baseline "
+              f"cost -> REPRODUCED")
+    else:
+        print("# CC-search check: no candidate beat the default on a "
+              "bursty scenario -> MISMATCH")
+
+    # ---- claim 3: AI-ECN upgrade shrinks the CE8850 sawtooth (Fig. 3) ----
+    v = 64 << 20
+    cv_default = search.sawtooth_cv("haicgu_ce8850", 4, "ring_allgather", v,
+                                    search.default_candidate())
+    cv_tuned = search.sawtooth_cv("haicgu_ce8850", 4, "ring_allgather", v,
+                                  AI_ECN_UPGRADE)
+    ok_saw = cv_tuned < 0.5 * cv_default
+    print(f"# sawtooth check: CE8850 goodput CV {cv_default:.2f} -> "
+          f"{cv_tuned:.2f} with tuned AI-ECN -> "
+          f"{'REPRODUCED' if ok_saw else 'MISMATCH'}")
+
+    if grad:
+        print("\n# gradient tier (victim slowdown differentiated through "
+              "the fluid scan):")
+        from repro.core import bench, congestion as cong
+        from repro.core.fabric import systems
+        case = bench.build_case(systems.get_system("haicgu_ce8850"), 8,
+                                "ring_allgather", "incast")
+        dt = bench.choose_dt(case.topo, case.n_victims, 8 << 20, case.lat())
+        params = case.cell_params(8 << 20, cong.steady(), dt)
+        out = search.gradient_refine(case.geom, params,
+                                     ["md", "rai_frac", "kmin"],
+                                     steps=4 if quick else 10)
+        print(f"  refined knobs: {out['knobs']}")
+        print(f"  objective history: "
+              f"{[f'{h:.3g}' for h in out['history']]}")
+
+    print(f"\n[mitigation_lab] done in {time.time() - t0:.0f}s")
+    ok = ok_fig4 and ok_cc and ok_saw
+    if not ok:
+        print("[mitigation_lab] FAILED checks", file=sys.stderr)
+        sys.exit(1)
+    return {"scores": scores, "frontier": front, "winner": winner}
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--grad", action="store_true",
+                   help="run the gradient-descent refinement tier")
+    a = p.parse_args()
+    main(quick=a.quick, grad=a.grad)

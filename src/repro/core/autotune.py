@@ -10,10 +10,10 @@ Two prediction tiers:
 * ``predict_analytic`` — alpha-beta model from the schedule's serialized
   step count and per-rank wire bytes (collectives.wire_bytes_model), with a
   fabric-dependent effective bandwidth. Free; used per-call.
-* ``predict_simulated`` — runs the fluid fabric simulator (core.bench) for
-  the collective under the given congestion profile; captures interaction
-  effects (HOL stall, CC transients) the alpha-beta model cannot. Cached;
-  used to build offline schedule tables.
+* ``predict_simulated`` — a thin lru-cached client of the mitigation
+  lab's simulator-backed scoring path (mitigation.search.simulated_times);
+  captures interaction effects (HOL stall, CC transients) the alpha-beta
+  model cannot. Cached; used to build offline schedule tables.
 
 The same machinery tunes the *pod-axis* options of the training step:
 gradient compression on/off trades wire bytes against quantization compute,
@@ -26,10 +26,9 @@ import dataclasses
 from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
-from repro.core import bench
 from repro.core import congestion as cong
 from repro.core.collectives import wire_bytes_model
-from repro.core.fabric.systems import SystemPreset, get_system
+from repro.core.fabric.systems import SystemPreset
 
 CANDIDATES: Dict[str, Tuple[str, ...]] = {
     "all_gather": ("ring_all_gather", "bidir_ring_all_gather"),
@@ -70,13 +69,14 @@ def predict_analytic(kind: str, algo: str, n: int, vector_bytes: float,
 def _simulated_point(system_name: str, n: int, coll: str, vector_bytes: float,
                      profile_kind: str, burst_s: float, pause_s: float,
                      aggressor: str) -> float:
-    system = get_system(system_name)
+    from repro.core.mitigation import search
+
     prof = {"off": cong.no_congestion(), "steady": cong.steady(),
             "bursty": cong.bursty(burst_s, pause_s)}[profile_kind]
-    r = bench.run_point(system, n * 2 if aggressor else n, coll,
-                        aggressor, vector_bytes, prof,
-                        n_iters=20, warmup=4)
-    return r.t_congested_s if aggressor else r.t_uncongested_s
+    t_u, t_c = search.simulated_times(
+        system_name, n * 2 if aggressor else n, coll, aggressor,
+        vector_bytes, prof, n_iters=20, warmup=4)
+    return t_c if aggressor else t_u
 
 
 def predict_simulated(kind: str, algo: str, n: int, vector_bytes: float,

@@ -33,7 +33,8 @@ from repro.core.fabric.simulator import (TDONE_SLOTS, FabricGeometry,
                                          run_cells, run_cells_hetero,
                                          stack_geometries, stack_params,
                                          summarize)
-from repro.core.fabric.systems import SystemPreset, get_system
+from repro.core.fabric.systems import (SystemPreset, default_policy,
+                                       get_system)
 
 # One (system, n_nodes) cell of a scale-batched sweep; systems may be
 # preset objects or registry names.
@@ -76,7 +77,10 @@ def resolve_victim_label(victim_coll: str, phased: bool, jobs=None) -> str:
     return victim_label(victim_coll, phased)
 
 
-def _mean_iter_time(res, lat: float) -> float:
+def mean_iter_time(res, lat: float) -> float:
+    """Reported per-iteration time of one summarized run: mean simulated
+    iteration + analytic per-step latency + mean queueing delay (shared
+    by the grid runners and mitigation.search)."""
     if len(res.iter_times) == 0:
         return float("inf")
     return float(np.mean(res.iter_times)) + lat + res.mean_qdelay_s
@@ -165,6 +169,9 @@ class GridCase:
     job_names: List[str] = None
     max_phases: int = 1
     primary_phased: bool = False  # job 0 runs a phased step schedule
+    # traced routing-policy id for this case's cells (the system default;
+    # mitigation/search overrides it per candidate)
+    policy: int = 0
 
     def __post_init__(self):
         if self.sweep_mask is None:
@@ -184,7 +191,8 @@ class GridCase:
             bpi = traffic.pad_rows(bpi, n_flows, 0.0)
             host_caps = traffic.pad_rows(host_caps, n_flows, 1.0)
         return make_params(self.system.cc, dt=dt, bytes_per_iter=bpi,
-                           host_caps=host_caps, env=profile.params())
+                           host_caps=host_caps, env=profile.params(),
+                           policy=self.policy)
 
     def lat(self) -> float:
         return cong.latency_model(self.victim_coll, self.n_victims)
@@ -194,7 +202,8 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
                aggr_coll: str, topo=None,
                nodes: Optional[np.ndarray] = None, *,
                phased: bool = False,
-               jobs: Optional[Sequence[traffic.JobSpec]] = None) -> GridCase:
+               jobs: Optional[Sequence[traffic.JobSpec]] = None,
+               policy_tables: bool = False) -> GridCase:
     """Build the flow program + geometry once for a whole grid of cells.
 
     Default: the paper's two-job victim/aggressor split. ``phased=True``
@@ -202,7 +211,10 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
     ``jobs`` replaces the split with an explicit multi-job program — jobs
     without nodes get an interleaved share of the allocation, and jobs
     with ``sweep_bytes`` are compiled at unit vector size and scaled per
-    cell.
+    cell. ``policy_tables=True`` additionally computes the ECMP/NSLB
+    static tables so traced policies can cross-select them (the
+    mitigation search needs this; plain sweeps only dispatch the policy
+    matching ``fixed_choice`` and skip the host-side assignment cost).
     """
     if topo is None:
         topo = machine_topology(system, n_nodes)
@@ -214,7 +226,7 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
                 if j.sweep_bytes and not j.endless else j for j in jobs]
         flows = cong.build_program_flowset(
             topo, jobs, routing_mode=system.static_routing,
-            k_max=system.k_max)
+            k_max=system.k_max, policy_tables=policy_tables)
         # caller-provided labels win (scenario cache keys); fall back to
         # the program's own names
         victim_coll = victim_coll or jobs[0].collective
@@ -229,9 +241,10 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
         flows = cong.build_flowset(topo, victims, aggressors, victim_coll,
                                    aggr_coll, 1.0,
                                    routing_mode=system.static_routing,
-                                   k_max=system.k_max, phased=phased)
+                                   k_max=system.k_max, phased=phased,
+                                   policy_tables=policy_tables)
         n_victims = len(victims)
-    geom = make_geometry(topo, flows, routing=system.routing)
+    geom = make_geometry(topo, flows)
     return GridCase(system=system, n_nodes=n_nodes, victim_coll=victim_coll,
                     aggr_coll=aggr_coll, topo=topo, geom=geom,
                     unit_bytes=flows.bytes_per_iter.copy(),
@@ -241,7 +254,8 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
                     job_names=list(flows.job_names),
                     max_phases=int(np.max(flows.n_phases)),
                     primary_phased=bool(jobs[0].phased) if jobs is not None
-                    else phased)
+                    else phased,
+                    policy=default_policy(system))
 
 
 # --------------------------------------------------------------------------
@@ -297,13 +311,13 @@ def _grid_results(case: GridCase, out: dict, sizes: Sequence[float],
         base = summarize(out, n_iters=n_iters, warmup=warmup, dt=dts[base_i],
                          chunk=chunk, stride=stride,
                          cell=cell_prefix + (base_i,))
-        t_u = _mean_iter_time(base, lat)
+        t_u = mean_iter_time(base, lat)
         for pi, prof in enumerate(profiles):
             ci = base_i + 1 + pi
             res = summarize(out, n_iters=n_iters, warmup=warmup, dt=dts[ci],
                             chunk=chunk, stride=stride,
                             cell=cell_prefix + (ci,))
-            t_c = _mean_iter_time(res, lat)
+            t_c = mean_iter_time(res, lat)
             results.append(BenchResult(
                 system=case.system.name, n_nodes=case.n_nodes,
                 victim=victim_label(case.victim_coll, case.primary_phased),
@@ -375,6 +389,16 @@ def _round_pow2(x: int) -> int:
     return 1 << max(0, int(x) - 1).bit_length()
 
 
+def bucket_stack(geoms: Sequence[FabricGeometry]):
+    """Pad geometries to their shared power-of-two GeometryDims bucket
+    and stack them for run_cells_hetero — THE bucket policy, shared by
+    run_scale_grid and mitigation.search.run_candidates (one place, so
+    the two paths cannot diverge on which compiles they reuse). Returns
+    ``(dims, stacked)``."""
+    dims = bucket_dims(geoms, round_up=_round_pow2)
+    return dims, stack_geometries([pad_geometry(g, dims) for g in geoms])
+
+
 def run_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
                    aggr_coll: str, sizes: Sequence[float],
                    profiles: Sequence[cong.Profile], *, n_iters: int = 60,
@@ -387,51 +411,42 @@ def run_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
     n_nodes)`` cells x (vector size x profile) — in one batched call per
     geometry *bucket*.
 
-    Cells are grouped by routing mode (the one meta field padding cannot
-    unify); each bucket's geometries are padded to a common power-of-two
-    shape (masks keep the padding provably inert — a padded run is
-    bit-identical to its unpadded equivalent) and stacked under a nested
-    ``jit(vmap(vmap(...)))``, so an EDR/HDR/NDR/Slingshot x {16..512}
-    nodes x collective sweep compiles the simulator at most once per
-    bucket. Results come back in input order: cells major, then sizes,
-    then baseline/profiles (matching a sequential per-cell run_grid
-    concatenation)."""
+    Routing is traced data (SimParams.policy) since the mitigation lab,
+    so mixed-routing cell lists no longer split into per-mode buckets:
+    ALL cells pad to one power-of-two GeometryDims bucket (masks keep
+    the padding provably inert — a padded run is bit-identical to its
+    unpadded equivalent) and stack under a nested ``jit(vmap(vmap(...)))``
+    — an EDR/HDR/NDR/Slingshot x {16..512} nodes x collective sweep
+    compiles the simulator ONCE per GeometryDims bucket (asserted via
+    simulator.TRACE_COUNTS in tests/test_grid.py). Results come back in
+    input order: cells major, then sizes, then baseline/profiles
+    (matching a sequential per-cell run_grid concatenation)."""
     check_iter_budget(n_iters)
     cases = []
     for sysname, n in cells:
         sysp = get_system(sysname) if isinstance(sysname, str) else sysname
         cases.append(build_case(sysp, int(n), victim_coll, aggr_coll,
                                 phased=phased, jobs=jobs))
+    if not cases:
+        return []
 
-    buckets: dict = {}
-    for ci, case in enumerate(cases):
-        buckets.setdefault(case.geom.routing, []).append(ci)
-
-    max_chunks = -(-max_steps // chunk)
-    per_case: List[Optional[List[BenchResult]]] = [None] * len(cases)
-    for idxs in buckets.values():
-        dims = bucket_dims([cases[i].geom for i in idxs],
-                           round_up=_round_pow2)
-        stacked = stack_geometries([pad_geometry(cases[i].geom, dims)
-                                    for i in idxs])
-        all_dts = [_cell_dts(cases[i], sizes, len(profiles), dt,
-                             cases[i].lat()) for i in idxs]
-        sub_cells = [(float(v), prof) for v in sizes
-                     for prof in [cong.no_congestion()] + list(profiles)]
-        params = stack_params([
-            stack_params([cases[i].cell_params(v, prof, d,
-                                               n_flows=dims.n_flows)
-                          for (v, prof), d in zip(sub_cells, all_dts[k])])
-            for k, i in enumerate(idxs)])
-        out = run_cells_hetero(stacked, params,
-                               jnp.asarray(n_iters, jnp.int32), chunk=chunk,
-                               max_chunks=max_chunks, stride=trace_stride)
-        for k, i in enumerate(idxs):
-            per_case[i] = _grid_results(
-                cases[i], out, sizes, profiles, all_dts[k], n_iters=n_iters,
-                warmup=warmup, chunk=chunk, stride=trace_stride,
-                cell_prefix=(k,))
-    return [r for rs in per_case for r in rs]
+    dims, stacked = bucket_stack([case.geom for case in cases])
+    all_dts = [_cell_dts(case, sizes, len(profiles), dt, case.lat())
+               for case in cases]
+    sub_cells = [(float(v), prof) for v in sizes
+                 for prof in [cong.no_congestion()] + list(profiles)]
+    params = stack_params([
+        stack_params([case.cell_params(v, prof, d, n_flows=dims.n_flows)
+                      for (v, prof), d in zip(sub_cells, all_dts[k])])
+        for k, case in enumerate(cases)])
+    out = run_cells_hetero(stacked, params, jnp.asarray(n_iters, jnp.int32),
+                           chunk=chunk, max_chunks=-(-max_steps // chunk),
+                           stride=trace_stride)
+    return [r for k, case in enumerate(cases)
+            for r in _grid_results(case, out, sizes, profiles, all_dts[k],
+                                   n_iters=n_iters, warmup=warmup,
+                                   chunk=chunk, stride=trace_stride,
+                                   cell_prefix=(k,))]
 
 
 def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
@@ -462,8 +477,8 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
                      stride=stride, cell=0)
     cong_res = summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
                          chunk=chunk, stride=stride, cell=1)
-    t_u = _mean_iter_time(base, lat)
-    t_c = _mean_iter_time(cong_res, lat)
+    t_u = mean_iter_time(base, lat)
+    t_c = mean_iter_time(cong_res, lat)
     res = BenchResult(
         system=system.name, n_nodes=n_nodes,
         victim=victim_label(case.victim_coll, case.primary_phased),
@@ -496,11 +511,12 @@ def _run_uncongested(system: SystemPreset, topo, nodes, coll: str,
     flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
                                routing_mode=system.static_routing,
                                k_max=system.k_max)
-    geom = make_geometry(topo, flows, routing=system.routing)
+    geom = make_geometry(topo, flows)
     params = make_params(system.cc, dt=dt,
                          bytes_per_iter=flows.bytes_per_iter,
                          host_caps=flows.host_caps,
-                         env=cong.no_congestion().params())
+                         env=cong.no_congestion().params(),
+                         policy=default_policy(system))
     chunk, stride = 2048, 8
     out = run_cell(geom, params, jnp.asarray(n_iters, jnp.int32),
                    chunk=chunk, max_chunks=-(-max_steps // chunk),

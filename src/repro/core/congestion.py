@@ -66,7 +66,8 @@ def build_program_flowset(topo: Topology, jobs: Sequence[traffic.JobSpec],
                           routing_mode: str = "deterministic",
                           k_max: int = 4, seed: int = 0,
                           validate: bool = True,
-                          pad_to: Tuple[int, int, int] = None) -> FlowSet:
+                          pad_to: Tuple[int, int, int] = None,
+                          policy_tables: bool = False) -> FlowSet:
     """Compile a multi-job traffic program and bind it to a topology:
     per-flow paths, NIC caps, and the packed phase tables the simulator
     executes. One FlowSet = one geometry = one JIT entry for every cell
@@ -91,6 +92,21 @@ def build_program_flowset(topo: Topology, jobs: Sequence[traffic.JobSpec],
         else np.zeros((0,), bool)
     choice = assign_paths(routing_mode, src_dst, paths_per_flow,
                           len(topo.caps), seed)
+    # ``policy_tables=True`` additionally computes every static table a
+    # traced routing policy may read (POLICY_ECMP / POLICY_NSLB are
+    # per-cell data — mitigation/search sweeps them on ONE geometry);
+    # the mode the caller asked for is reused verbatim so legacy
+    # fixed_choice and its traced twin stay bit-identical. Off by
+    # default: the NSLB greedy is O(F*K*hops) host-side Python, and the
+    # non-mitigation paths only ever dispatch the policy matching
+    # fixed_choice (FlowSet falls back to it), so sweeps that never
+    # cross-select a policy skip the cost.
+    alt = {routing_mode: choice}
+    if policy_tables:
+        for mode in ("ecmp", "nslb"):
+            if mode not in alt:
+                alt[mode] = assign_paths(mode, src_dst, paths_per_flow,
+                                         len(topo.caps), seed)
     # injection-link capacity per flow (the host's NIC rate)
     host_caps = np.array(
         [topo.caps[p[0][0]] if p and p[0] else topo.caps.max()
@@ -100,6 +116,7 @@ def build_program_flowset(topo: Topology, jobs: Sequence[traffic.JobSpec],
                    is_victim=is_victim,
                    bytes_per_iter=prog.bytes_per_phase,
                    fixed_choice=choice, host_caps=host_caps, src_id=src_id,
+                   ecmp_choice=alt.get("ecmp"), nslb_choice=alt.get("nslb"),
                    flow_job=prog.flow_job, flow_phase=prog.flow_phase,
                    n_phases=prog.n_phases, phase_gap=prog.phase_gap,
                    sweep_mask=prog.sweep_mask, job_names=prog.job_names())
@@ -109,7 +126,8 @@ def build_flowset(topo: Topology, victim_nodes, aggressor_nodes,
                   victim_coll: str, aggr_coll: str, vector_bytes: float,
                   routing_mode: str = "deterministic",
                   k_max: int = 4, seed: int = 0,
-                  phased: bool = False) -> FlowSet:
+                  phased: bool = False,
+                  policy_tables: bool = False) -> FlowSet:
     """The paper's two-job program: one victim collective (flattened by
     default; ``phased=True`` lowers its step schedule) plus an endless
     envelope-gated aggressor on the interleaved node split."""
@@ -122,7 +140,8 @@ def build_flowset(topo: Topology, victim_nodes, aggressor_nodes,
             nodes=tuple(int(x) for x in aggressor_nodes),
             endless=True, envelope_gated=True, sweep_bytes=False))
     return build_program_flowset(topo, jobs, routing_mode=routing_mode,
-                                 k_max=k_max, seed=seed)
+                                 k_max=k_max, seed=seed,
+                                 policy_tables=policy_tables)
 
 
 def latency_model(kind: str, n: int, per_step_s: float = 2e-6) -> float:

@@ -37,6 +37,26 @@ KIND_AI_ECN = 3
 ROUTE_FIXED = 0
 ROUTE_ADAPTIVE = 1
 
+# Bounded ranges for the mitigation lab's searchable knobs
+# (mitigation/search.py validates every candidate against these; each key
+# is a traced SimParams field). "kind" spans the four fabric CC models —
+# swapping it is the firmware-upgrade axis (e.g. CE8850 DCQCN -> AI-ECN).
+SEARCH_BOUNDS = {
+    "kind": (0, 3),
+    "md": (0.3, 0.95),
+    "rai_frac": (0.002, 0.2),
+    "cc_interval_s": (10e-6, 400e-6),
+    "kmin": (0.05, 0.6),
+    "kmax": (0.3, 0.95),
+    "hol_factor": (0.0, 1.0),
+    "hol_start": (0.3, 0.95),
+    "min_rate_frac": (0.005, 0.1),
+    "follow_tau_s": (0.0, 200e-6),
+    "follow_gain": (0.9, 1.5),
+    "thresh_adapt": (0.0, 1.0),
+    "flowlet_gap_s": (20e-6, 2e-3),
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class CCParams:

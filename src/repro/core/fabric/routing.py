@@ -1,8 +1,14 @@
-"""Static path-assignment policies (paper §II load balancing).
+"""Path-assignment policies (paper §II load balancing).
+
+Static (host-side, resolved ahead of time):
 
 * ``deterministic`` — always the first candidate path (legacy IB static).
-* ``ecmp``          — hash of (src, dst); hash collisions leave links idle
-                      while others oversubscribe (paper refs [9]-[13]).
+* ``ecmp``          — splitmix64 hash of (salt, src, dst); hash collisions
+                      leave links idle while others oversubscribe (paper
+                      refs [9]-[13]). The mixer is an explicit integer
+                      permutation, so path choices are reproducible across
+                      platforms and unit-testable against fixed
+                      expectations (Python's builtin ``hash`` is neither).
 * ``nslb``          — Network Scale Load Balance (Huawei CE9855, ref [22]):
                       a flow-matrix computation assigns collision-free
                       uplinks per (source edge, destination edge) pair;
@@ -10,12 +16,71 @@
                       paths, processed per source so concurrent flows from
                       one source spread across distinct uplinks.
 
-Adaptive routing (IB AR / Slingshot) is *dynamic* and lives in the simulator
-step (ROUTE_ADAPTIVE); these are the static policies resolved ahead of time.
+Traced (per-cell data, dispatched by ``lax.switch`` inside the simulator
+step — the mitigation lab sweeps these as plain ``SimParams`` knobs, so a
+grid mixing routing policies batches under one compile):
+
+* ``POLICY_FIXED``    — the host-side static assignment baked into the
+  geometry (whatever ``static_routing`` mode built it).
+* ``POLICY_ECMP`` / ``POLICY_NSLB`` — the ecmp / nslb tables, selectable
+  at trace time regardless of which mode built ``fixed_choice`` (bit-
+  identical to a legacy geometry built with that mode).
+* ``POLICY_ADAPTIVE`` — min-queue rerouting with a sprayed home path and
+  hysteresis (IB AR / Slingshot), evaluated per step.
+* ``POLICY_FLOWLET``  — flowlet re-pathing: a flow keeps its current path
+  while transmitting and re-picks the least-loaded candidate when its
+  idle gap exceeds a traced threshold (``SimParams.flowlet_gap_s``) —
+  burst boundaries are the only safe re-ordering points.
 """
 from __future__ import annotations
 
+from typing import Dict
+
 import numpy as np
+
+# Traced routing-policy ids (SimParams.policy; lax.switch in the step).
+POLICY_FIXED = 0
+POLICY_ECMP = 1
+POLICY_NSLB = 2
+POLICY_ADAPTIVE = 3
+POLICY_FLOWLET = 4
+N_POLICIES = 5
+
+POLICY_NAMES: Dict[int, str] = {
+    POLICY_FIXED: "fixed", POLICY_ECMP: "ecmp", POLICY_NSLB: "nslb",
+    POLICY_ADAPTIVE: "adaptive", POLICY_FLOWLET: "flowlet",
+}
+
+# static_routing mode -> the traced policy that reproduces it bit-for-bit
+STATIC_MODE_POLICY: Dict[str, int] = {
+    "deterministic": POLICY_FIXED, "ecmp": POLICY_ECMP, "nslb": POLICY_NSLB,
+}
+
+_U64 = np.uint64
+_SPLITMIX_GAMMA = 0x9E3779B97F4A7C15
+_SPLITMIX_M1 = 0xBF58476D1CE4E5B9
+_SPLITMIX_M2 = 0x94D049BB133111EB
+
+
+def splitmix64(x) -> np.ndarray:
+    """SplitMix64 finalizer: an explicit, platform-independent 64-bit
+    mixer (Steele et al.). Accepts scalars or uint64 arrays; all
+    arithmetic wraps mod 2^64 by construction."""
+    with np.errstate(over="ignore"):  # wrap-around IS the algorithm
+        x = (np.asarray(x, _U64) + _U64(_SPLITMIX_GAMMA))
+        x = (x ^ (x >> _U64(30))) * _U64(_SPLITMIX_M1)
+        x = (x ^ (x >> _U64(27))) * _U64(_SPLITMIX_M2)
+        return x ^ (x >> _U64(31))
+
+
+def ecmp_hash(src, dst, salt) -> np.ndarray:
+    """Deterministic ECMP hash of (src, dst) under ``salt`` — two
+    splitmix64 rounds so src and dst both avalanche. Vectorized over
+    src/dst arrays."""
+    s = np.asarray(src, _U64)
+    d = np.asarray(dst, _U64)
+    key = (splitmix64(_U64(salt)) << _U64(32)) ^ (s << _U64(1)) ^ d
+    return splitmix64(splitmix64(key) ^ d)
 
 
 def assign_paths(mode: str, flows_src_dst, paths_per_flow, n_links: int,
@@ -25,12 +90,12 @@ def assign_paths(mode: str, flows_src_dst, paths_per_flow, n_links: int,
     if mode == "deterministic":
         return choice
     if mode == "ecmp":
-        rng = np.random.RandomState(seed)
-        salt = rng.randint(1 << 30)
-        for f, (s, d) in enumerate(flows_src_dst):
-            n = max(1, len(paths_per_flow[f]))
-            choice[f] = (hash((s, d, salt)) & 0x7FFFFFFF) % n
-        return choice
+        if F == 0:
+            return choice
+        src = np.array([s for s, _ in flows_src_dst], np.uint64)
+        dst = np.array([d for _, d in flows_src_dst], np.uint64)
+        n = np.maximum([len(p) for p in paths_per_flow], 1).astype(np.uint64)
+        return (ecmp_hash(src, dst, seed) % n).astype(np.int32)
     if mode == "nslb":
         # flow-matrix style: greedy min-max link usage, grouped by source so
         # one source's concurrent flows land on distinct uplinks.

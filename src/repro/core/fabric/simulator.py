@@ -6,7 +6,10 @@ is a ``jax.lax.scan`` over fixed-dt timesteps:
 
   1. injection demand from per-flow CC rate limits, gated by phase
      membership (a flow transmits only while its job is in its phase),
-  2. (adaptive routing) per-flow path choice by min queue occupancy,
+  2. per-flow path choice by the cell's *traced* routing policy — a
+     ``lax.switch`` over SimParams.policy (fixed / ECMP / NSLB tables,
+     adaptive min-queue, flowlet re-pathing), so cells with different
+     routing policies batch in one compile (mitigation lab),
   3. staged feed-forward propagation (FIFO fluid sharing per hop),
   4. queue integration (offered load vs capacity) + ECN/credit signals,
   5. CC rate update per fabric model + optional backpressure spreading,
@@ -48,6 +51,9 @@ import numpy as np
 
 from repro.core.fabric.cc import (CCParams, KIND_AI_ECN, KIND_DCQCN, KIND_IB,
                                   KIND_SLINGSHOT, ROUTE_ADAPTIVE, ROUTE_FIXED)
+from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
+                                       POLICY_FIXED, POLICY_FLOWLET,
+                                       POLICY_NSLB)
 from repro.core.fabric.topology import Topology
 from repro.core.envelopes import ENV_COMPONENTS, envelope_at, no_congestion
 from repro.core.traffic import pad_rows
@@ -87,9 +93,14 @@ class FlowSet:
     path_len: np.ndarray  # (F, K) hop counts (for minimal-path bias)
     is_victim: np.ndarray  # (F,) bool — flow of a non-envelope-gated job
     bytes_per_iter: np.ndarray  # (F,) bytes per phase visit; endless ~inf
-    fixed_choice: np.ndarray  # (F,)
+    fixed_choice: np.ndarray  # (F,) host-side static assignment
     host_caps: np.ndarray  # (F,) injection-link capacity per flow
     src_id: np.ndarray  # (F,) source node (NIC injection limiting)
+    # --- traced-policy static tables (POLICY_ECMP / POLICY_NSLB read
+    # these regardless of which mode built fixed_choice; default to the
+    # fixed assignment so legacy flow sets stay policy-invariant) ---
+    ecmp_choice: Optional[np.ndarray] = None  # (F,)
+    nslb_choice: Optional[np.ndarray] = None  # (F,)
     # --- traffic-program tables (defaulted for legacy flat flow sets) ---
     flow_job: Optional[np.ndarray] = None  # (F,) owning job id
     flow_phase: Optional[np.ndarray] = None  # (F,) phase within the job
@@ -99,6 +110,10 @@ class FlowSet:
     job_names: Optional[List[str]] = None
 
     def __post_init__(self):
+        if self.ecmp_choice is None:
+            self.ecmp_choice = np.asarray(self.fixed_choice, np.int32)
+        if self.nslb_choice is None:
+            self.nslb_choice = np.asarray(self.fixed_choice, np.int32)
         # Legacy construction (no program tables): victims are job 0
         # phase 0, aggressors job 1 phase 0, both single-phase loops.
         if self.flow_job is None:
@@ -148,15 +163,20 @@ def pack_paths(paths_per_flow: List[List[List[int]]], sink: int, k_max: int = 4)
 @partial(jax.tree_util.register_dataclass,
          data_fields=["caps_pad", "caps_finite", "dst_sw", "src_sw", "paths",
                       "n_paths", "spray_choice", "path_len", "is_victim",
-                      "fixed_choice", "src_id", "flow_job", "flow_phase",
-                      "n_phases", "phase_gap"],
-         meta_fields=["L", "n_sw", "n_src", "routing", "n_jobs"])
+                      "fixed_choice", "ecmp_choice", "nslb_choice", "src_id",
+                      "flow_job", "flow_phase", "n_phases", "phase_gap"],
+         meta_fields=["L", "n_sw", "n_src", "n_jobs"])
 @dataclasses.dataclass(frozen=True)
 class FabricGeometry:
     """Everything structural: link capacities, switch adjacency, packed
     flow paths, and the traffic-program tables (which job/phase each flow
     belongs to, program lengths, compute gaps). Built once per
-    (topology, flow program); shared by every cell of a parameter sweep."""
+    (topology, flow program); shared by every cell of a parameter sweep.
+
+    Routing policy is NOT part of the geometry: it is traced per-cell
+    data (``SimParams.policy``), so geometries differing only in routing
+    stack into one bucket. The geometry carries every *static* choice
+    table a traced policy may read (fixed / ecmp / nslb)."""
 
     caps_pad: jnp.ndarray  # (L+1,) with inf sink
     caps_finite: jnp.ndarray  # (L+1,) with 1.0 sink
@@ -167,7 +187,9 @@ class FabricGeometry:
     spray_choice: jnp.ndarray  # (F,) deterministic sprayed home path
     path_len: jnp.ndarray  # (F, K) float
     is_victim: jnp.ndarray  # (F,) bool
-    fixed_choice: jnp.ndarray  # (F,)
+    fixed_choice: jnp.ndarray  # (F,) host-side static assignment
+    ecmp_choice: jnp.ndarray  # (F,) POLICY_ECMP table
+    nslb_choice: jnp.ndarray  # (F,) POLICY_NSLB table
     src_id: jnp.ndarray  # (F,)
     flow_job: jnp.ndarray  # (F,) owning job per flow
     flow_phase: jnp.ndarray  # (F,) phase membership per flow
@@ -176,7 +198,6 @@ class FabricGeometry:
     L: int
     n_sw: int
     n_src: int
-    routing: int
     n_jobs: int
 
     @property
@@ -185,7 +206,6 @@ class FabricGeometry:
 
 
 def make_geometry(topo: Topology, flows: FlowSet,
-                  routing: int = ROUTE_FIXED,
                   prune: bool = True) -> FabricGeometry:
     """Bind a flow set to a topology.
 
@@ -243,13 +263,14 @@ def make_geometry(topo: Topology, flows: FlowSet,
         path_len=jnp.asarray(flows.path_len, jnp.float32),
         is_victim=jnp.asarray(flows.is_victim),
         fixed_choice=jnp.asarray(flows.fixed_choice),
+        ecmp_choice=jnp.asarray(flows.ecmp_choice, jnp.int32),
+        nslb_choice=jnp.asarray(flows.nslb_choice, jnp.int32),
         src_id=jnp.asarray(src_dense.astype(np.int32)),
         flow_job=jnp.asarray(flows.flow_job, jnp.int32),
         flow_phase=jnp.asarray(flows.flow_phase, jnp.int32),
         n_phases=jnp.asarray(flows.n_phases, jnp.int32),
         phase_gap=jnp.asarray(flows.phase_gap, jnp.float32),
-        L=L, n_sw=n_sw, n_src=n_src, routing=routing,
-        n_jobs=flows.n_jobs)
+        L=L, n_sw=n_sw, n_src=n_src, n_jobs=flows.n_jobs)
 
 
 # --------------------------------------------------------------------------
@@ -259,9 +280,10 @@ def make_geometry(topo: Topology, flows: FlowSet,
 
 @dataclasses.dataclass(frozen=True)
 class GeometryDims:
-    """Bucket shape every member geometry is padded to. Equal dims (plus
-    equal ``routing``) make FabricGeometry pytrees stackable: the meta
-    fields become identical, so ``jax.vmap`` batches the data fields."""
+    """Bucket shape every member geometry is padded to. Equal dims make
+    FabricGeometry pytrees stackable: the meta fields become identical,
+    so ``jax.vmap`` batches the data fields (routing policy is traced
+    SimParams data, not meta — mixed-routing cells share a bucket)."""
 
     n_links: int  # L (sink lives at index n_links)
     n_flows: int
@@ -353,20 +375,22 @@ def pad_geometry(geom: FabricGeometry, dims: GeometryDims) -> FabricGeometry:
         path_len=jnp.asarray(path_len),
         is_victim=jnp.asarray(pad_rows(np.asarray(geom.is_victim), F, False)),
         fixed_choice=jnp.asarray(pad_rows(np.asarray(geom.fixed_choice), F, 0)),
+        ecmp_choice=jnp.asarray(pad_rows(np.asarray(geom.ecmp_choice), F, 0)),
+        nslb_choice=jnp.asarray(pad_rows(np.asarray(geom.nslb_choice), F, 0)),
         src_id=jnp.asarray(pad_rows(np.asarray(geom.src_id), F,
                                  dims.n_src - 1)),
         flow_job=jnp.asarray(pad_rows(np.asarray(geom.flow_job), F, J - 1)),
         flow_phase=jnp.asarray(pad_rows(np.asarray(geom.flow_phase), F, 0)),
         n_phases=jnp.asarray(n_phases), phase_gap=jnp.asarray(phase_gap),
-        L=L_new, n_sw=dims.n_sw, n_src=dims.n_src, routing=geom.routing,
-        n_jobs=J)
+        L=L_new, n_sw=dims.n_sw, n_src=dims.n_src, n_jobs=J)
 
 
 def stack_geometries(geoms: Sequence[FabricGeometry]) -> FabricGeometry:
     """Stack same-shape geometries into one batched pytree (leading cell
-    axis on every data field). All meta fields — including ``routing`` —
-    must agree; pad to a common :class:`GeometryDims` first."""
-    metas = {(g.L, g.n_sw, g.n_src, g.routing, g.n_jobs) for g in geoms}
+    axis on every data field). All meta fields must agree; pad to a
+    common :class:`GeometryDims` first. Routing policy is traced data
+    (SimParams.policy), so mixed-routing cells stack freely."""
+    metas = {(g.L, g.n_sw, g.n_src, g.n_jobs) for g in geoms}
     if len(metas) != 1:
         raise ValueError(f"cannot stack geometries with differing meta "
                          f"fields: {sorted(metas)}")
@@ -379,7 +403,8 @@ def stack_geometries(geoms: Sequence[FabricGeometry]) -> FabricGeometry:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["dt", "bytes_per_iter", "host_caps", "env", "kind",
+         data_fields=["dt", "bytes_per_iter", "host_caps", "env", "policy",
+                      "flowlet_gap_s", "kind",
                       "qmax_bytes", "kmin", "kmax", "md", "rai_frac",
                       "cc_interval_s", "hol_factor", "hol_start",
                       "min_rate_frac", "follow_tau_s", "follow_gain",
@@ -394,6 +419,10 @@ class SimParams:
     bytes_per_iter: jnp.ndarray  # (F,)
     host_caps: jnp.ndarray  # (F,)
     env: jnp.ndarray  # (ENV_COMPONENTS, 5) congestion-envelope components
+    # routing policy id (routing.POLICY_*) + flowlet idle-gap threshold —
+    # traced, so mixed-routing grids batch in one compile
+    policy: jnp.ndarray  # () int32
+    flowlet_gap_s: jnp.ndarray  # () seconds
     # CC scalars (cc.CCParams lowered to data; kind selects the update rule)
     kind: jnp.ndarray  # () int32
     qmax_bytes: jnp.ndarray
@@ -413,11 +442,15 @@ class SimParams:
 
 
 def make_params(cc: CCParams, *, dt: float, bytes_per_iter: np.ndarray,
-                host_caps: np.ndarray, env: np.ndarray) -> SimParams:
+                host_caps: np.ndarray, env: np.ndarray,
+                policy: int = POLICY_FIXED,
+                flowlet_gap_s: float = 200e-6) -> SimParams:
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     return SimParams(
         dt=f32(dt), bytes_per_iter=f32(bytes_per_iter),
         host_caps=f32(host_caps), env=f32(env),
+        policy=jnp.asarray(policy, jnp.int32),
+        flowlet_gap_s=f32(flowlet_gap_s),
         kind=jnp.asarray(cc.kind, jnp.int32),
         qmax_bytes=f32(cc.qmax_bytes), kmin=f32(cc.kmin), kmax=f32(cc.kmax),
         md=f32(cc.md), rai_frac=f32(cc.rai_frac),
@@ -448,6 +481,11 @@ def init_state(geom: FabricGeometry, p: SimParams):
         "thresh": jnp.full((geom.L + 1,), jnp.float32(1.0)) * p.kmin
         * p.qmax_bytes,
         "last_dec": jnp.zeros((F,), jnp.float32),
+        # --- traced-routing state: flowlet current path + idle time,
+        # per-flow delivered-bytes accumulator (mitigation scoring)
+        "rc": geom.spray_choice,
+        "idle": jnp.zeros((F,), jnp.float32),
+        "fbytes": jnp.zeros((F,), jnp.float32),
         # --- traffic-program state: per-job phase counter, remaining
         # compute gap of the current phase, completed program iterations
         "ph": jnp.zeros((J,), jnp.int32),
@@ -537,24 +575,54 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
                         / jnp.maximum(src_load[geom.src_id], 1.0))
     inject = inject * scale
 
-    # ---- routing: spray + congestion-triggered rerouting ----
-    # Production AR does NOT send every flow to the globally least-loaded
-    # port (that herds and oscillates); flows keep a sprayed home path
-    # and move off it only when its occupancy is clearly worse than the
-    # best alternative (hysteresis).
-    if geom.routing == ROUTE_ADAPTIVE:
-        occ = state["q"] / p.qmax_bytes
-        score = jnp.max(occ[geom.paths], axis=2) \
-            + 0.05 * geom.path_len / jnp.maximum(geom.path_len[:, :1], 1)
-        score = jnp.where(jnp.arange(geom.paths.shape[1])[None, :]
-                          < geom.n_paths[:, None], score, jnp.inf)
-        best = jnp.argmin(score, axis=1)
-        home = geom.spray_choice
-        home_score = jnp.take_along_axis(score, home[:, None], 1)[:, 0]
-        best_score = jnp.min(score, axis=1)
-        choice = jnp.where(home_score > best_score + 0.10, best, home)
-    else:
-        choice = geom.fixed_choice
+    # ---- routing: traced per-cell policy (lax.switch over p.policy) ----
+    # Static tables (fixed / ecmp / nslb) read precomputed host-side
+    # assignments; dynamic policies score candidates by queue occupancy.
+    # Under vmap the switch lowers to a select, so one compile serves a
+    # grid mixing every policy. The candidate scores are hoisted out of
+    # the branches and computed ONCE — the dominant engine entries are
+    # batched (run_cells/_hetero evaluate every branch anyway), so
+    # sharing the (F, K, H) occupancy gather halves its per-step cost.
+    occ_paths = state["q"] / p.qmax_bytes
+    score = jnp.max(occ_paths[geom.paths], axis=2) \
+        + 0.05 * geom.path_len / jnp.maximum(geom.path_len[:, :1], 1)
+    score = jnp.where(jnp.arange(geom.paths.shape[1])[None, :]
+                      < geom.n_paths[:, None], score, jnp.inf)
+    best = jnp.argmin(score, axis=1)
+    best_score = jnp.min(score, axis=1)
+
+    def _hysteresis(anchor):
+        # Production AR does NOT send every flow to the globally least-
+        # loaded port (that herds and oscillates): a flow leaves its
+        # anchor path only when its occupancy is clearly worse than the
+        # best alternative.
+        a_score = jnp.take_along_axis(score, anchor[:, None], 1)[:, 0]
+        return jnp.where(a_score > best_score + 0.10, best, anchor)
+
+    def _route_adaptive(_):
+        # anchored on the sprayed home path, re-evaluated every step
+        return _hysteresis(geom.spray_choice), state["rc"]
+
+    def _route_flowlet(_):
+        # flowlet re-pathing: keep the current path while the flow
+        # transmits; once its idle gap exceeds the traced threshold the
+        # next burst re-evaluates — anchored on the CURRENT path with
+        # the same hysteresis as adaptive (all-idle flows re-picking a
+        # global argmin would herd onto one uplink), but only at flowlet
+        # boundaries (idle resets on activity below, so a live flow
+        # never re-orders mid-burst).
+        rc = jnp.where(state["idle"] >= p.flowlet_gap_s,
+                       _hysteresis(state["rc"]), state["rc"])
+        return rc, rc
+
+    route_branches = [None] * 5
+    route_branches[POLICY_FIXED] = lambda _: (geom.fixed_choice, state["rc"])
+    route_branches[POLICY_ECMP] = lambda _: (geom.ecmp_choice, state["rc"])
+    route_branches[POLICY_NSLB] = lambda _: (geom.nslb_choice, state["rc"])
+    route_branches[POLICY_ADAPTIVE] = _route_adaptive
+    route_branches[POLICY_FLOWLET] = _route_flowlet
+    choice, rc_new = jax.lax.switch(p.policy, route_branches, None)
+    idle_new = jnp.where(active, 0.0, state["idle"] + dt)
     plinks = jnp.take_along_axis(
         geom.paths, choice[:, None, None], axis=1)[:, 0]  # (F, H)
     valid = plinks < geom.L
@@ -684,6 +752,8 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
 
     new_state = {"c": c, "rem": rem, "q": q, "arr": arrival,
                  "thresh": thresh, "last_dec": last_dec,
+                 "rc": rc_new, "idle": idle_new,
+                 "fbytes": state["fbytes"] + a * dt,
                  "ph": ph_next, "gap": gap, "it": it, "t_done": t_done,
                  "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
     if with_aux:
@@ -722,6 +792,7 @@ def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
         cond, body, (state, buf, jnp.zeros((), jnp.int32)))
     return {"t_done": state["t_done"], "it": state["it"],
             "qd_acc": state["qd_acc"], "t": state["t"],
+            "fbytes": state["fbytes"],
             "trace": buf, "chunks": k}
 
 
@@ -818,13 +889,18 @@ class FabricSim:
         self.flows = flows
         self.cc = cc
         self.dt = float(dt)
-        self.geom = make_geometry(topo, flows, routing)
+        # legacy routing flag (cc.ROUTE_*) -> traced policy id: FIXED
+        # replays the host-side static table baked into the flow set
+        self.policy = POLICY_ADAPTIVE if routing == ROUTE_ADAPTIVE \
+            else POLICY_FIXED
+        self.geom = make_geometry(topo, flows)
 
     def params(self, profile=None) -> SimParams:
         profile = profile or no_congestion()
         return make_params(
             self.cc, dt=self.dt, bytes_per_iter=self.flows.bytes_per_iter,
-            host_caps=self.flows.host_caps, env=profile.params())
+            host_caps=self.flows.host_caps, env=profile.params(),
+            policy=self.policy)
 
     def run(self, *, n_iters: int = 60, warmup: int = 10, profile=None,
             max_steps: int = 400_000, chunk: int = 2048,

@@ -16,6 +16,8 @@ from typing import Callable, Optional
 from repro.core.fabric import cc as cc_lib
 from repro.core.fabric import topology as topo_lib
 from repro.core.fabric.cc import CCParams, ROUTE_ADAPTIVE, ROUTE_FIXED
+from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_FIXED,
+                                       STATIC_MODE_POLICY)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,3 +128,14 @@ PRESETS = {
 
 def get_system(name: str) -> SystemPreset:
     return PRESETS[name]()
+
+
+def default_policy(system: SystemPreset) -> int:
+    """Traced routing-policy id equivalent to the preset's legacy
+    (routing, static_routing) pair — bit-identical by construction:
+    adaptive presets route per-step; fixed presets replay the static
+    table their ``static_routing`` mode produced (which the traced
+    ecmp/nslb policies read straight from the geometry)."""
+    if system.routing == ROUTE_ADAPTIVE:
+        return POLICY_ADAPTIVE
+    return STATIC_MODE_POLICY.get(system.static_routing, POLICY_FIXED)

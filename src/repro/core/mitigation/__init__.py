@@ -1,0 +1,14 @@
+"""Mitigation lab: congestion mitigations as first-class searchable
+objects (paper's closing charge — "guide researchers and HPC architects
+in designing more effective congestion-control mechanisms and network
+load-balancing strategies").
+
+* :mod:`search` — bounded CC / routing knob spaces expanded into stacked
+  ``SimParams`` and swept through the batched engine in one
+  ``jit(vmap)``, plus a gradient tier that differentiates victim
+  slowdown through the fluid scan.
+* :mod:`score` — multi-scenario panels drawn from the scenario registry,
+  per-candidate metrics (victim slowdown, aggressor goodput, Jain
+  fairness), Pareto frontier and per-fabric winner selection.
+"""
+from repro.core.mitigation import score, search  # noqa: F401

@@ -1,0 +1,390 @@
+"""Vmapped mitigation search: CC / load-balancing knob spaces swept
+through the batched fabric engine.
+
+A :class:`Candidate` is one point of the mitigation space: a traced
+routing policy id (+ flowlet gap) and a set of CC scalar overrides —
+every knob a ``SimParams`` field, bounded by ``cc.SEARCH_BOUNDS``.
+:func:`run_candidates` expands (panel cell x candidate x
+baseline/congested) into stacked ``SimParams`` and executes the whole
+search in ONE ``run_cells_hetero`` call per GeometryDims bucket: the
+candidates ride the same vmap lanes a parameter sweep does, so scoring
+50 candidates costs one compile, not 50.
+
+Two tiers:
+
+* **grid tier** — cartesian expansion of :class:`CCSpace` x
+  :class:`RoutingSpace` (:func:`expand`), scored by
+  ``score.score_table``.
+* **gradient tier** (:func:`gradient_refine`) — the engine is pure, so
+  victim slowdown is differentiable through the fluid scan: continuous
+  knobs are sigmoid-reparameterized into their bounds and descended
+  with plain Adam against a fixed-length ``lax.scan`` objective
+  (``lax.while_loop`` has no reverse-mode rule — the early-exit runner
+  is for measurement, the fixed-length one for gradients; DESIGN.md
+  §12 documents the caveat).
+
+:func:`simulated_times` is the single simulator-backed scoring path —
+``autotune.predict_simulated`` is a thin lru-cached client of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bench
+from repro.core import congestion as cong
+from repro.core.fabric import simulator as sim
+from repro.core.fabric.cc import SEARCH_BOUNDS
+from repro.core.fabric.routing import (POLICY_FLOWLET, POLICY_NAMES)
+from repro.core.fabric.systems import SystemPreset, default_policy, get_system
+
+# knobs that stay integers when lowered into SimParams
+_INT_KNOBS = ("kind",)
+
+
+def check_bounds(name: str, value: float) -> float:
+    if name not in SEARCH_BOUNDS:
+        raise KeyError(f"unknown mitigation knob {name!r}; "
+                       f"known: {sorted(SEARCH_BOUNDS)}")
+    lo, hi = SEARCH_BOUNDS[name]
+    if not (lo <= value <= hi):
+        raise ValueError(f"{name}={value} outside bounds [{lo}, {hi}]")
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class CCSpace:
+    """Bounded CC knob grid: (SimParams field, candidate values) pairs,
+    expanded as a cartesian product. Values are validated against
+    ``cc.SEARCH_BOUNDS`` at construction."""
+
+    knobs: Tuple[Tuple[str, Tuple[float, ...]], ...] = ()
+
+    def __post_init__(self):
+        for name, values in self.knobs:
+            for v in values:
+                check_bounds(name, v)
+
+    @staticmethod
+    def of(**knobs) -> "CCSpace":
+        return CCSpace(tuple((k, tuple(v)) for k, v in knobs.items()))
+
+    def grid(self) -> List[Dict[str, float]]:
+        names = [k for k, _ in self.knobs]
+        return [dict(zip(names, vs)) for vs in itertools.product(
+            *(vals for _, vals in self.knobs))] or [{}]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingSpace:
+    """Load-balancing candidates: traced policy ids plus flowlet gap
+    thresholds (the gap axis only multiplies the flowlet policy)."""
+
+    policies: Tuple[int, ...] = ()
+    flowlet_gaps_s: Tuple[float, ...] = (200e-6,)
+
+    def __post_init__(self):
+        for g in self.flowlet_gaps_s:
+            check_bounds("flowlet_gap_s", g)
+
+    def grid(self) -> List[Dict[str, float]]:
+        out: List[Dict[str, float]] = []
+        for pol in self.policies or (None,):
+            gaps = self.flowlet_gaps_s if pol == POLICY_FLOWLET \
+                else self.flowlet_gaps_s[:1]
+            out.extend({"policy": pol, "flowlet_gap_s": g} for g in gaps)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the mitigation space. ``policy=None`` keeps each
+    panel cell's system-default policy (CC-only candidates score fairly
+    across fabrics with different native routing)."""
+
+    policy: Optional[int] = None
+    flowlet_gap_s: float = 200e-6
+    cc: Tuple[Tuple[str, float], ...] = ()
+    name: str = ""
+
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        pol = "native" if self.policy is None else POLICY_NAMES[self.policy]
+        if self.policy == POLICY_FLOWLET:
+            pol += f"[{self.flowlet_gap_s * 1e6:g}us]"
+        cc = ",".join(f"{k}={v:g}" for k, v in self.cc)
+        return pol + (f"|{cc}" if cc else "")
+
+    def apply(self, p: sim.SimParams, default_pol: int) -> sim.SimParams:
+        pol = self.policy if self.policy is not None else default_pol
+        kw = {"policy": jnp.asarray(pol, jnp.int32),
+              "flowlet_gap_s": jnp.asarray(self.flowlet_gap_s, jnp.float32)}
+        # a cc override of flowlet_gap_s (it IS a bounded knob) wins over
+        # the routing-axis default
+        kw.update({k: jnp.asarray(v, jnp.int32 if k in _INT_KNOBS
+                                  else jnp.float32) for k, v in self.cc})
+        return dataclasses.replace(p, **kw)
+
+
+def expand(cc_space: CCSpace = CCSpace(),
+           routing_space: RoutingSpace = RoutingSpace()) -> List[Candidate]:
+    """Cartesian grid tier: every (routing x CC) combination, validated
+    against the knob bounds."""
+    out = []
+    for r in routing_space.grid():
+        for c in cc_space.grid():
+            for k, v in c.items():
+                check_bounds(k, v)
+            out.append(Candidate(policy=r["policy"],
+                                 flowlet_gap_s=r["flowlet_gap_s"],
+                                 cc=tuple(sorted(c.items()))))
+    return out
+
+
+def default_candidate(name: str = "default") -> Candidate:
+    """The fabric's shipped configuration (native policy, stock CC)."""
+    return Candidate(name=name)
+
+
+# --------------------------------------------------------------------------
+# Batched execution: (panel cell x candidate x baseline/congested) lanes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelCell:
+    """One scoring scenario: a (system, allocation, traffic program,
+    congestion profile, vector size) cell every candidate is measured
+    on. ``jobs`` swaps the victim/aggressor split for a multi-job mix
+    (scenarios._mix_jobs)."""
+
+    name: str
+    system: SystemPreset
+    n_nodes: int
+    victim: str
+    aggressor: str
+    vector_bytes: float
+    profile: cong.Profile
+    jobs: tuple = ()
+
+
+@dataclasses.dataclass
+class CellRun:
+    """Raw per-(cell, candidate) measurements (score.py derives the
+    Pareto metrics from these)."""
+
+    cell: str
+    candidate: str
+    t_uncongested_s: float
+    t_congested_s: float
+    ratio: float
+    victim_bytes: float  # delivered by victim flows, congested lane
+    aggr_bytes: float  # delivered by aggressor/background flows
+    sim_time_s: float
+    jain: float  # fairness over victim flows' delivered bytes
+
+
+def _jain(x: np.ndarray) -> float:
+    x = np.asarray(x, np.float64)
+    x = x[x > 0]
+    if len(x) == 0:
+        return 1.0
+    return float((x.sum() ** 2) / (len(x) * np.sum(x * x)))
+
+
+def run_candidates(panel: Sequence[PanelCell],
+                   candidates: Sequence[Candidate], *,
+                   n_iters: int = 12, warmup: int = 3,
+                   max_steps: int = 200_000, chunk: int = 2048,
+                   stride: int = 8) -> List[CellRun]:
+    """Score every candidate on every panel cell in one batched call:
+    geometries pad into one GeometryDims bucket (routing is traced data,
+    so mixed-policy candidates share the compile) and params carry
+    (cell, candidate x {baseline, congested}) lanes."""
+    bench.check_iter_budget(n_iters)
+    # policy_tables: candidates cross-select ECMP/NSLB as traced data,
+    # so every panel geometry must carry the full static tables
+    cases = [bench.build_case(c.system, c.n_nodes, c.victim, c.aggressor,
+                              jobs=list(c.jobs) or None,
+                              policy_tables=True) for c in panel]
+    dims, stacked = bench.bucket_stack([c.geom for c in cases])
+    dts, rows = [], []
+    for cell, case in zip(panel, cases):
+        dt = bench.choose_dt(case.topo, case.n_victims, cell.vector_bytes,
+                             case.lat(), n_phases=case.max_phases)
+        dts.append(dt)
+        lane = []
+        for cand in candidates:
+            for prof in (cong.no_congestion(), cell.profile):
+                p = case.cell_params(cell.vector_bytes, prof, dt,
+                                     n_flows=dims.n_flows)
+                lane.append(cand.apply(p, case.policy))
+        rows.append(sim.stack_params(lane))
+    params = sim.stack_params(rows)
+    out = sim.run_cells_hetero(stacked, params,
+                               jnp.asarray(n_iters, jnp.int32), chunk=chunk,
+                               max_chunks=-(-max_steps // chunk),
+                               stride=stride)
+    runs: List[CellRun] = []
+    fbytes = np.asarray(out["fbytes"])
+    t_all = np.asarray(out["t"])
+    for ci, (cell, case, dt) in enumerate(zip(panel, cases, dts)):
+        lat = case.lat()
+        F = case.geom.n_flows
+        vmask = np.asarray(case.is_victim, bool)
+        for ki, cand in enumerate(candidates):
+            base_i, cong_i = 2 * ki, 2 * ki + 1
+            t_u = bench.mean_iter_time(
+                sim.summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
+                              chunk=chunk, stride=stride,
+                              cell=(ci, base_i)), lat)
+            t_c = bench.mean_iter_time(
+                sim.summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
+                              chunk=chunk, stride=stride,
+                              cell=(ci, cong_i)), lat)
+            fb = fbytes[ci, cong_i][:F]
+            runs.append(CellRun(
+                cell=cell.name, candidate=cand.label(),
+                t_uncongested_s=t_u, t_congested_s=t_c,
+                ratio=t_u / t_c if t_c > 0 else 0.0,
+                victim_bytes=float(fb[vmask].sum()),
+                aggr_bytes=float(fb[~vmask].sum()),
+                sim_time_s=float(t_all[ci, cong_i]),
+                jain=_jain(fb[vmask])))
+    return runs
+
+
+# --------------------------------------------------------------------------
+# Shared simulator-backed point scoring (autotune's table tier)
+# --------------------------------------------------------------------------
+
+
+def simulated_times(system_name: str, n_nodes: int, victim: str,
+                    aggressor: str, vector_bytes: float,
+                    profile: cong.Profile, *, n_iters: int = 20,
+                    warmup: int = 4) -> Tuple[float, float]:
+    """(t_uncongested, t_congested) for one cell — THE simulator-backed
+    scoring path, shared by the mitigation search (a 1-candidate panel)
+    and autotune.predict_simulated's lru-cached table tier."""
+    cell = PanelCell(name="point", system=get_system(system_name),
+                     n_nodes=n_nodes, victim=victim, aggressor=aggressor,
+                     vector_bytes=float(vector_bytes), profile=profile)
+    run = run_candidates([cell], [default_candidate()], n_iters=n_iters,
+                         warmup=warmup)[0]
+    return run.t_uncongested_s, run.t_congested_s
+
+
+def sawtooth_cv(system_name: str, n_nodes: int, coll: str,
+                vector_bytes: float, candidate: Candidate, *,
+                n_iters: int = 25, dt: float = 20e-6,
+                max_steps: int = 200_000) -> float:
+    """Coefficient of variation of the steady-state victim goodput trace
+    on a self-congestion run (no aggressors) under ``candidate`` — the
+    Fig. 3 sawtooth amplitude metric (test_fabric.test_obs1): high CV =
+    bang-bang CC oscillation, low CV = damped response."""
+    system = get_system(system_name)
+    topo = bench.machine_topology(system, n_nodes)
+    nodes = bench.allocate(system, n_nodes)
+    flows = cong.build_flowset(topo, nodes, [], coll, "", vector_bytes,
+                               routing_mode=system.static_routing,
+                               k_max=system.k_max)
+    geom = sim.make_geometry(topo, flows)
+    params = sim.make_params(system.cc, dt=dt,
+                             bytes_per_iter=flows.bytes_per_iter,
+                             host_caps=flows.host_caps,
+                             env=cong.no_congestion().params(),
+                             policy=default_policy(system))
+    chunk, stride = 2048, 8
+    out = sim.run_cell(geom, candidate.apply(params, default_policy(system)),
+                       jnp.asarray(n_iters, jnp.int32), chunk=chunk,
+                       max_chunks=-(-max_steps // chunk), stride=stride)
+    res = sim.summarize(out, n_iters=n_iters, warmup=5, dt=dt, chunk=chunk,
+                        stride=stride)
+    tr = res.victim_rate_trace
+    tr = tr[len(tr) // 3:]
+    tr = tr[tr > 0]
+    if len(tr) == 0 or tr.mean() == 0:
+        return 0.0
+    return float(tr.std() / tr.mean())
+
+
+# --------------------------------------------------------------------------
+# Gradient tier: differentiate victim slowdown through the fluid scan
+# --------------------------------------------------------------------------
+
+# continuous knobs the gradient tier may descend (ints excluded)
+GRAD_KNOBS = tuple(k for k in SEARCH_BOUNDS if k not in _INT_KNOBS)
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def _to_bounds(theta, lo, hi):
+    return lo + (hi - lo) * _sigmoid(theta)
+
+
+def _from_bounds(v, lo, hi):
+    frac = np.clip((v - lo) / (hi - lo), 1e-4, 1 - 1e-4)
+    return float(np.log(frac / (1 - frac)))
+
+
+def victim_objective(geom: sim.FabricGeometry, p: sim.SimParams,
+                     n_steps: int):
+    """Negative mean victim goodput over a fixed-length scan — the
+    differentiable surrogate for victim slowdown (no early exit: the
+    while_loop runner is not reverse-mode differentiable)."""
+    state = sim.init_state(geom, p)
+    state, gp = jax.lax.scan(lambda s, _: sim.step(geom, p, s), state,
+                             None, length=n_steps)
+    return -jnp.mean(gp)
+
+
+def gradient_refine(geom: sim.FabricGeometry, base: sim.SimParams,
+                    knobs: Sequence[str], *, steps: int = 8,
+                    lr: float = 0.25, n_steps: int = 800) -> Dict:
+    """Descend the selected continuous knobs from ``base`` (projected
+    into their bounds via a sigmoid reparameterization) with Adam.
+    Returns the best knob values seen and the objective history."""
+    knobs = list(knobs)
+    for k in knobs:
+        if k not in GRAD_KNOBS:
+            raise KeyError(f"{k!r} is not a continuous searchable knob")
+    bounds = np.array([SEARCH_BOUNDS[k] for k in knobs], np.float64)
+    lo = jnp.asarray(bounds[:, 0], jnp.float32)
+    hi = jnp.asarray(bounds[:, 1], jnp.float32)
+    theta0 = jnp.asarray(
+        [_from_bounds(float(getattr(base, k)), *SEARCH_BOUNDS[k])
+         for k in knobs], jnp.float32)
+
+    def loss(theta):
+        vals = _to_bounds(theta, lo, hi)
+        p = dataclasses.replace(base, **{k: vals[i]
+                                         for i, k in enumerate(knobs)})
+        return victim_objective(geom, p, n_steps)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    m = v = jnp.zeros_like(theta0)
+    theta, best_theta = theta0, theta0
+    best = float("inf")
+    history = []
+    for t in range(1, steps + 1):
+        val, g = grad_fn(theta)
+        val = float(val)
+        history.append(val)
+        if val < best:
+            best, best_theta = val, theta
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.999 ** t)
+        theta = theta - lr * mh / (jnp.sqrt(vh) + 1e-8)
+    vals = np.asarray(_to_bounds(best_theta, lo, hi))
+    return {"knobs": {k: float(vals[i]) for i, k in enumerate(knobs)},
+            "objective": best, "history": history}

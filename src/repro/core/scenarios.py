@@ -417,6 +417,69 @@ def mixed_topology(quick: bool = False) -> Scenario:
         grids, n_iters=15, warmup=3)
 
 
+# --------------------------------------------------------------------------
+# Mitigation-lab scenario families (mitigation/search + score; the
+# benchmarks/mitigation_lab.py driver scores candidates across these)
+# --------------------------------------------------------------------------
+
+
+@register
+def mitigation_panel(quick: bool = False) -> Scenario:
+    """The mitigation lab's scoring panel: every candidate (CC config x
+    routing policy) is measured on each of these cells (score.py turns
+    grids into PanelCells). Quick = the 2-scenario CI smoke: the Fig. 4
+    leaf-spine cell (load-balancing axis) + the bursty Leonardo incast
+    collapse (CC axis — the congestion tree is HOL-driven, so
+    ``hol_factor`` isolation is what the search should find); full adds
+    the steady incast collapse and a multi-job mix."""
+    grids = [
+        # Fig. 4 leaf-spine cell: steady AlltoAll-on-AlltoAll — the NSLB
+        # vs ECMP flat-line claim lives here
+        Grid("nanjing_nslb", 8, "alltoall", (4 * MiB,), (cong.steady(),),
+             victim="alltoall"),
+        # bursty duty-cycle incast at 64 nodes on Leonardo (HDR): the
+        # paper's congestion-tree collapse — the CC-search axis
+        Grid("leonardo", 64, "incast", (2 * MiB,),
+             (cong.bursty(2e-3, 2e-3),)),
+    ]
+    if not quick:
+        grids += [
+            Grid("leonardo", 32, "incast", (2 * MiB,), (cong.steady(),)),
+            Grid("leonardo", 32, "training_vs_incast", (2 * MiB,),
+                 (cong.steady(),), victim="ring_allreduce",
+                 jobs=_mix_jobs("training_vs_incast")),
+        ]
+    return Scenario(
+        "mitigation_panel",
+        "Mitigation-lab scoring panel: steady Fig.4 leaf-spine, bursty "
+        "and steady Leonardo incast collapse, multi-job mix.",
+        tuple(grids), n_iters=12, warmup=3)
+
+
+@register
+def mitigation_routing(quick: bool = False) -> Scenario:
+    """Routing-policy shootout on path-diverse fabrics: the same cells
+    the traced-policy engine sweeps as data (fixed/ECMP/NSLB/adaptive/
+    flowlet ride one compile); as a plain scenario it exercises the
+    mixed-routing scale-batched path end-to-end."""
+    cells = (("nanjing_ecmp", 8), ("cresco8", 16)) if quick else \
+        (("nanjing_ecmp", 8), ("nanjing_nslb", 8), ("cresco8", 16),
+         ("leonardo", 32))
+    sizes = (4 * MiB,) if quick else (512 * KiB, 4 * MiB)
+    profiles = (cong.steady(),) if quick else \
+        (cong.steady(), cong.bursty(2e-3, 2e-3))
+    grids = tuple(Grid("mitigation", 0, a, sizes, profiles,
+                       victim="alltoall", cells=cells)
+                  for a in (("alltoall",) if quick
+                            else ("alltoall", "incast")))
+    return Scenario(
+        "mitigation_routing",
+        "Mixed-routing shootout (leaf-spine ECMP/NSLB, fat-tree and "
+        "Dragonfly+ AR) — one scale-batched compile across routing "
+        "modes.",
+        grids, n_iters=12, warmup=3)
+
+
 @register
 def multi_tenant(quick: bool = False) -> Scenario:
     """Several aggressor tenants with different burst periods share the

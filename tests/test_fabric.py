@@ -121,6 +121,33 @@ def test_ecmp_is_deterministic_per_seed():
     assert (c1 == c2).all()
 
 
+def test_splitmix64_reference_vectors():
+    """The ECMP mixer is an explicit integer permutation — fixed
+    expectations hold on every platform/implementation (splitmix64(0)
+    is the published SplitMix64 test vector)."""
+    assert int(routing.splitmix64(0)) == 0xE220A8397B1DCDAF
+    assert int(routing.splitmix64(1)) == 0x910A2DEC89025CC1
+    assert int(routing.splitmix64(42)) == 0xBDD732262FEB6E95
+    # vectorized == scalar
+    vec = routing.splitmix64(np.array([0, 1, 42], np.uint64))
+    assert [int(v) for v in vec] == [0xE220A8397B1DCDAF,
+                                     0x910A2DEC89025CC1,
+                                     0xBDD732262FEB6E95]
+
+
+def test_ecmp_hash_fixed_expectations():
+    """Path choices are pure functions of (src, dst, salt): pinned
+    values, src/dst asymmetry, salt sensitivity."""
+    assert int(routing.ecmp_hash(3, 7, 0)) == 0x8C19E8018B510253
+    assert int(routing.ecmp_hash(7, 3, 0)) == 0x9BDBD056CBAE684F
+    assert int(routing.ecmp_hash(3, 7, 9)) == 0x476318EECEAEED47
+    topo, src_dst, paths = _uplink_flows()  # 4 candidate paths per flow
+    assert list(routing.assign_paths("ecmp", src_dst, paths,
+                                     len(topo.caps), seed=0)) == [0, 3, 3, 3]
+    assert list(routing.assign_paths("ecmp", src_dst, paths,
+                                     len(topo.caps), seed=3)) == [2, 2, 2, 3]
+
+
 # --------------------------------------------------------------------------
 # congestion profiles + flow construction
 # --------------------------------------------------------------------------

@@ -105,11 +105,11 @@ def test_pruned_geometry_bit_identical():
     dt = 4e-6
     outs = {}
     for prune in (False, True):
-        geom = sim_lib.make_geometry(topo, flows, routing=sysp.routing,
-                                     prune=prune)
+        geom = sim_lib.make_geometry(topo, flows, prune=prune)
         params = sim_lib.make_params(
             sysp.cc, dt=dt, bytes_per_iter=flows.bytes_per_iter,
-            host_caps=flows.host_caps, env=cong.steady().params())
+            host_caps=flows.host_caps, env=cong.steady().params(),
+            policy=systems.default_policy(sysp))
         outs[prune] = _run_outputs(geom, params)
     assert outs[True]["t_done"].shape == outs[False]["t_done"].shape
     _assert_bit_identical(outs[False], outs[True], "prune")
@@ -151,17 +151,22 @@ def test_scale_grid_matches_sequential_one_compile_per_bucket():
     assert sim_lib.trace_count("run_cells_hetero") - before == 0
 
 
-def test_mixed_routing_buckets_split():
-    """Fixed-routing and adaptive-routing systems cannot share a bucket
-    (routing is compile-time meta): a mixed cell list costs exactly one
-    compile per routing class, and every cell still reports results."""
-    cells = [("haicgu_ib", 8), ("cresco8", 8)]
+def test_mixed_routing_single_bucket_single_compile():
+    """Routing policy is traced data (SimParams.policy) since the
+    mitigation lab, so a cell list mixing fixed-routing (haicgu_ib,
+    nanjing ECMP+NSLB static tables) and adaptive-routing (cresco8)
+    systems pads into ONE GeometryDims bucket and costs at most ONE
+    simulator compile — the routing-mode bucket split is gone — and
+    every cell still reports results."""
+    cells = [("haicgu_ib", 8), ("cresco8", 8), ("nanjing_nslb", 8),
+             ("nanjing_ecmp", 8)]
     before = sim_lib.trace_count("run_cells_hetero")
     rows = bench.run_scale_grid(cells, "ring_allgather", "incast",
                                 [1 << 20], [cong.steady()], n_iters=6,
                                 warmup=1)
-    assert sim_lib.trace_count("run_cells_hetero") - before <= 2
-    assert [r.system for r in rows] == ["haicgu_ib", "cresco8"]
+    assert sim_lib.trace_count("run_cells_hetero") - before <= 1
+    assert [r.system for r in rows] == ["haicgu_ib", "cresco8",
+                                        "nanjing_nslb", "nanjing_ecmp"]
     assert all(0.0 < r.ratio <= 1.1 for r in rows)
 
 

@@ -1,0 +1,271 @@
+"""Mitigation-lab tests: traced routing policies (bit-identity vs legacy
+host-side assignment, conservation under re-pathing, adaptive/flowlet
+never worse than the worst static policy), candidate spaces and bounds,
+single-compile batched search, Pareto scoring, and the gradient tier."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bench, congestion as cong
+from repro.core.fabric import simulator as sim, systems
+from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
+                                       POLICY_FIXED, POLICY_FLOWLET,
+                                       POLICY_NSLB)
+from repro.core.mitigation import score, search
+from repro.core.mitigation.search import Candidate, PanelCell
+
+RUN_KW = dict(chunk=512, max_chunks=40, stride=8)
+
+
+def _outputs(geom, params, n_iters=8):
+    out = sim.run_cell(geom, params, jnp.asarray(n_iters, jnp.int32),
+                       **RUN_KW)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _nanjing_cell(static_mode: str):
+    """An 8-node leaf-spine AlltoAll-vs-AlltoAll cell whose host-side
+    static assignment uses ``static_mode``."""
+    sysp = systems.get_system("nanjing_ecmp")
+    topo = sysp.make_topology(8)
+    vidx, aidx = cong.interleaved_split(8)
+    nodes = np.arange(8)
+    flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx], "alltoall",
+                               "alltoall", 4 << 20,
+                               routing_mode=static_mode, k_max=sysp.k_max,
+                               policy_tables=True)
+    geom = sim.make_geometry(topo, flows)
+    params = sim.make_params(sysp.cc, dt=2e-6,
+                             bytes_per_iter=flows.bytes_per_iter,
+                             host_caps=flows.host_caps,
+                             env=cong.steady().params())
+    return geom, params
+
+
+# --------------------------------------------------------------------------
+# Traced policies == legacy host-side assignment, bit for bit
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,policy", [("deterministic", POLICY_FIXED),
+                                         ("ecmp", POLICY_ECMP),
+                                         ("nslb", POLICY_NSLB)])
+def test_traced_policy_matches_legacy_static(mode, policy):
+    """POLICY_FIXED on a geometry whose fixed_choice was host-assigned
+    with ``mode`` must equal the traced twin policy on a geometry built
+    with any other static mode (the tables are per-flow data now)."""
+    geom_legacy, params = _nanjing_cell(mode)
+    legacy = _outputs(geom_legacy,
+                      dataclasses.replace(
+                          params, policy=jnp.asarray(POLICY_FIXED,
+                                                     jnp.int32)))
+    geom_det, params_det = _nanjing_cell("deterministic")
+    traced = _outputs(geom_det,
+                      dataclasses.replace(
+                          params_det, policy=jnp.asarray(policy,
+                                                         jnp.int32)))
+    for k in ("t_done", "it", "qd_acc", "t", "trace", "chunks", "fbytes"):
+        assert np.array_equal(legacy[k], traced[k]), (mode, k)
+
+
+def test_policies_actually_differ():
+    """The sanity inverse: on the collision-prone leaf spine, the traced
+    policies must NOT all coincide (otherwise the switch is wired to one
+    table and the bit-identity test proves nothing)."""
+    geom, params = _nanjing_cell("deterministic")
+    times = {}
+    for pol in (POLICY_FIXED, POLICY_NSLB, POLICY_ADAPTIVE):
+        out = _outputs(geom, dataclasses.replace(
+            params, policy=jnp.asarray(pol, jnp.int32)))
+        times[pol] = float(out["t_done"][0][:4].sum())
+    assert times[POLICY_NSLB] < times[POLICY_FIXED], times
+    assert len({round(t, 9) for t in times.values()}) > 1
+
+
+# --------------------------------------------------------------------------
+# Conservation + never-worse-than-worst-static under re-pathing
+# --------------------------------------------------------------------------
+
+
+def test_flow_conservation_under_repathing():
+    """Flowlet re-pathing must preserve the per-step conservation
+    invariants: service capped by effective capacity, achieved rate
+    never above injection, NIC caps respected — and with a bursty
+    envelope the idle-gap trigger must actually re-path some flow."""
+    sysp = systems.get_system("nanjing_ecmp")
+    topo = sysp.make_topology(8)
+    vidx, aidx = cong.interleaved_split(8)
+    nodes = np.arange(8)
+    flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx], "alltoall",
+                               "alltoall", 1 << 20,
+                               routing_mode="deterministic",
+                               k_max=sysp.k_max)
+    geom = sim.make_geometry(topo, flows)
+    params = sim.make_params(sysp.cc, dt=2e-6,
+                             bytes_per_iter=flows.bytes_per_iter,
+                             host_caps=flows.host_caps,
+                             env=cong.bursty(0.5e-3, 0.5e-3).params(),
+                             policy=POLICY_FLOWLET, flowlet_gap_s=20e-6)
+    step = jax.jit(sim.step_debug)
+    state = sim.init_state(geom, params)
+    # herd every flow onto candidate 0: the idle-gap trigger must then
+    # spread them (with hysteresis, a balanced start never re-paths —
+    # that is the point of the anchor)
+    state["rc"] = jnp.zeros_like(state["rc"])
+    rc0 = np.asarray(state["rc"]).copy()
+    repathed = False
+    src_cap = np.zeros(geom.n_src)
+    np.maximum.at(src_cap, np.asarray(geom.src_id),
+                  np.asarray(params.host_caps))
+    for _ in range(600):
+        state, _, aux = step(geom, params, state)
+        served = np.asarray(aux["served_stage_max"])
+        caps_eff = np.asarray(aux["caps_eff"])
+        assert (served[: geom.L]
+                <= caps_eff[: geom.L] * (1 + 1e-3) + 1.0).all()
+        inj = np.asarray(aux["inject"])
+        assert (np.asarray(aux["achieved"]) <= inj * (1 + 1e-5) + 1.0).all()
+        src_load = np.zeros(geom.n_src)
+        np.add.at(src_load, np.asarray(geom.src_id), inj)
+        assert (src_load <= src_cap * (1 + 1e-3) + 1.0).all()
+        if not np.array_equal(np.asarray(state["rc"]), rc0):
+            repathed = True
+    assert repathed, "flowlet policy never re-pathed under a bursty envelope"
+
+
+def test_adaptive_and_flowlet_not_worse_than_worst_static():
+    """Steady-state property: the dynamic policies may not lose to the
+    WORST static assignment (deterministic herds every flow onto one
+    uplink — a dynamic policy that cannot beat that is broken)."""
+    geom, params = _nanjing_cell("deterministic")
+    t_victim = {}
+    for pol in (POLICY_FIXED, POLICY_ECMP, POLICY_NSLB, POLICY_ADAPTIVE,
+                POLICY_FLOWLET):
+        out = _outputs(geom, dataclasses.replace(
+            params, policy=jnp.asarray(pol, jnp.int32),
+            flowlet_gap_s=jnp.asarray(100e-6, jnp.float32)), n_iters=6)
+        done = int(out["it"][0])
+        assert done >= 1, pol
+        t_victim[pol] = float(out["t_done"][0][min(done, 6) - 1]) \
+            / min(done, 6)
+    worst_static = max(t_victim[POLICY_FIXED], t_victim[POLICY_ECMP],
+                       t_victim[POLICY_NSLB])
+    assert t_victim[POLICY_ADAPTIVE] <= worst_static * 1.05, t_victim
+    assert t_victim[POLICY_FLOWLET] <= worst_static * 1.05, t_victim
+
+
+# --------------------------------------------------------------------------
+# Candidate spaces, bounds, Pareto scoring
+# --------------------------------------------------------------------------
+
+
+def test_knob_bounds_enforced():
+    with pytest.raises(ValueError):
+        search.CCSpace.of(md=(0.1,))  # below lower bound
+    with pytest.raises(KeyError):
+        search.CCSpace.of(nonsense=(1.0,))
+    with pytest.raises(ValueError):
+        search.RoutingSpace(policies=(POLICY_FLOWLET,),
+                            flowlet_gaps_s=(1.0,))  # 1 s gap out of range
+    with pytest.raises(KeyError):
+        search.gradient_refine(None, None, ["kind"])  # int knob
+
+
+def test_expand_cartesian_and_flowlet_gap_axis():
+    cands = search.expand(
+        search.CCSpace.of(md=(0.5, 0.8), rai_frac=(0.02,)),
+        search.RoutingSpace(policies=(POLICY_NSLB, POLICY_FLOWLET),
+                            flowlet_gaps_s=(50e-6, 200e-6)))
+    # nslb: 1 gap (collapsed) x 2 cc; flowlet: 2 gaps x 2 cc
+    assert len(cands) == 2 + 4
+    labels = {c.label() for c in cands}
+    assert len(labels) == len(cands)
+
+
+def test_pareto_frontier_and_winner_guard():
+    mk = lambda n, rmin, aggr, jain, rel: score.CandidateScore(
+        candidate=n, ratio_min=rmin, ratio_mean=rmin, aggr_gbps=aggr,
+        jain=jain, t_base_worst_rel=rel)
+    dominated = mk("dominated", 0.5, 10.0, 0.9, 1.0)
+    balanced = mk("balanced", 0.9, 80.0, 0.95, 1.0)  # best aggr goodput
+    throttler = mk("throttler", 0.95, 1.0, 1.0, 1.0)  # starves aggressors
+    taxed = mk("taxed", 0.99, 60.0, 0.99, 1.3)  # slows the baseline 30%
+    front = score.pareto_frontier([dominated, balanced, throttler, taxed])
+    names = [s.candidate for s in front]
+    assert "dominated" not in names
+    assert {"balanced", "throttler", "taxed"} <= set(names)
+    win = score.pick_winner([dominated, balanced, throttler, taxed])
+    assert win.candidate == "throttler"  # taxed fails the baseline guard
+
+
+# --------------------------------------------------------------------------
+# Batched search: mixed policies + heterogeneous cells, one compile
+# --------------------------------------------------------------------------
+
+
+def test_run_candidates_single_compile_mixed_policies():
+    panel = [
+        PanelCell("leafspine", systems.get_system("nanjing_ecmp"), 8,
+                  "alltoall", "alltoall", 2 << 20, cong.steady()),
+        PanelCell("single_switch", systems.get_system("haicgu_ib"), 8,
+                  "ring_allgather", "incast", 2 << 20,
+                  cong.bursty(2e-3, 2e-3)),
+    ]
+    cands = [search.default_candidate(),
+             Candidate(policy=POLICY_NSLB, name="nslb"),
+             Candidate(policy=POLICY_FLOWLET, flowlet_gap_s=100e-6,
+                       name="flowlet"),
+             Candidate(cc=(("md", 0.8),), name="gentle")]
+    before = sim.trace_count("run_cells_hetero")
+    runs = search.run_candidates(panel, cands, n_iters=6, warmup=1,
+                                 max_steps=40_000, chunk=512)
+    assert sim.trace_count("run_cells_hetero") - before <= 1
+    assert len(runs) == len(panel) * len(cands)
+    for r in runs:
+        assert 0.0 < r.ratio <= 1.2, r
+        assert 0.0 < r.jain <= 1.0 + 1e-6, r
+        assert r.victim_bytes > 0, r
+    # the traced-policy engine must separate nslb from the ecmp default
+    # on the collision-prone leaf spine
+    by = {(r.cell, r.candidate): r for r in runs}
+    assert by[("leafspine", "nslb")].ratio \
+        > by[("leafspine", "default")].ratio + 0.05
+
+
+def test_simulated_times_matches_run_point():
+    """autotune's table tier (a 1-candidate panel) must agree with the
+    legacy run_point path — padding and candidate plumbing are inert."""
+    sysp = systems.get_system("nanjing_nslb")
+    t_u, t_c = search.simulated_times("nanjing_nslb", 8, "alltoall",
+                                      "alltoall", 4 << 20, cong.steady(),
+                                      n_iters=10, warmup=2)
+    r = bench.run_point(sysp, 8, "alltoall", "alltoall", 4 << 20,
+                        cong.steady(), n_iters=10, warmup=2)
+    assert np.isclose(t_u, r.t_uncongested_s, rtol=1e-5)
+    assert np.isclose(t_c, r.t_congested_s, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Gradient tier
+# --------------------------------------------------------------------------
+
+
+def test_gradient_refine_descends():
+    """Victim slowdown is differentiable through the fluid scan: the
+    refined objective must not be worse than the starting point, knobs
+    stay inside their bounds, and the history is finite."""
+    case = bench.build_case(systems.get_system("haicgu_ce8850"), 6,
+                            "ring_allgather", "incast")
+    dt = bench.choose_dt(case.topo, case.n_victims, 4 << 20, case.lat())
+    params = case.cell_params(4 << 20, cong.steady(), dt)
+    out = search.gradient_refine(case.geom, params, ["md", "rai_frac"],
+                                 steps=4, n_steps=300)
+    assert np.isfinite(out["history"]).all(), out["history"]
+    assert out["objective"] <= out["history"][0] + 1e-6
+    from repro.core.fabric.cc import SEARCH_BOUNDS
+    for k, v in out["knobs"].items():
+        lo, hi = SEARCH_BOUNDS[k]
+        assert lo <= v <= hi, (k, v)

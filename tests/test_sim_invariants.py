@@ -20,7 +20,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import congestion as cong, traffic
 from repro.core.fabric import cc as cc_lib, simulator as sim
 from repro.core.fabric import topology as topo_lib
-from repro.core.fabric.cc import ROUTE_ADAPTIVE, ROUTE_FIXED
+from repro.core.fabric.routing import N_POLICIES
 
 FAMILIES = sorted(topo_lib.FAMILIES)
 COLLECTIVES = ("ring_allgather", "ring_allreduce", "alltoall", "incast")
@@ -30,7 +30,7 @@ CCS = {"dcqcn": cc_lib.dcqcn, "ib": lambda: cc_lib.infiniband("hdr"),
 _step_debug = jax.jit(sim.step_debug)
 
 
-def _build(family, n_nodes, coll, cc_name, routing, vector_bytes,
+def _build(family, n_nodes, coll, cc_name, policy, vector_bytes,
            aggr="incast"):
     topo = topo_lib.make_family(family, n_nodes)
     vidx, aidx = cong.interleaved_split(n_nodes)
@@ -38,11 +38,12 @@ def _build(family, n_nodes, coll, cc_name, routing, vector_bytes,
     flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx], coll, aggr,
                                vector_bytes, phased=True)
     cc = CCS[cc_name]()
-    geom = sim.make_geometry(topo, flows, routing=routing)
+    geom = sim.make_geometry(topo, flows)
     dt = 2e-6
     params = sim.make_params(cc, dt=dt, bytes_per_iter=flows.bytes_per_iter,
                              host_caps=flows.host_caps,
-                             env=cong.steady().params())
+                             env=cong.steady().params(),
+                             policy=policy, flowlet_gap_s=100e-6)
     return topo, flows, geom, params
 
 
@@ -51,14 +52,15 @@ def _build(family, n_nodes, coll, cc_name, routing, vector_bytes,
        n_nodes=st.integers(4, 12),
        coll=st.sampled_from(COLLECTIVES),
        cc_name=st.sampled_from(sorted(CCS)),
-       routing=st.sampled_from([ROUTE_FIXED, ROUTE_ADAPTIVE]),
+       policy=st.sampled_from(list(range(N_POLICIES))),
        vector_bytes=st.floats(64 * 1024, 16 * 1024 * 1024))
-def test_step_invariants(family, n_nodes, coll, cc_name, routing,
+def test_step_invariants(family, n_nodes, coll, cc_name, policy,
                          vector_bytes):
     """Queues bounded, service capped by capacity, injection capped by
-    the NIC, phase/iteration counters monotone — at every step."""
+    the NIC, phase/iteration counters monotone — at every step, under
+    every traced routing policy (incl. flowlet re-pathing)."""
     topo, flows, geom, params = _build(family, n_nodes, coll, cc_name,
-                                       routing, vector_bytes)
+                                       policy, vector_bytes)
     qmax = float(params.qmax_bytes)
     state = sim.init_state(geom, params)
     # max host-link rate per source id (pad-safe: sources with no flows
