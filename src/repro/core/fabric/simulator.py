@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 from functools import partial
 from typing import List, Optional, Sequence
 
@@ -57,10 +58,48 @@ from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
 from repro.core.fabric.topology import Topology
 from repro.core.envelopes import ENV_COMPONENTS, envelope_at, no_congestion
 from repro.core.traffic import pad_rows
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
 
 # Fixed iteration-time buffer: n_iters is traced (no recompile across
 # protocols); completed iterations beyond the buffer fold into the last slot.
 TDONE_SLOTS = 96
+_TDONE_ARANGE = np.arange(TDONE_SLOTS)  # hoisted iteration-slot ids
+
+# ---------------------------------------------------------------------------
+# Step-core backend: the memory-bound scatter core of each step (NIC limit,
+# backpressure segment-sums, H-hop propagation, queue update) is extracted
+# into repro.kernels — ``ref`` is the pure-jnp oracle (the original lax
+# code, the default off-TPU), ``pallas`` the fused kernel
+# (kernels/fabric_step.py, DESIGN.md §13). Resolution order: explicit
+# ``backend=`` argument > set_step_backend() > $REPRO_FABRIC_KERNEL > auto
+# (pallas on TPU, ref elsewhere). The public entries resolve EAGERLY in a
+# thin Python wrapper and pass the resolved name as a static jit argument,
+# so switching backends never serves stale compiles.
+STEP_BACKENDS = ("auto", "ref", "pallas")
+_step_backend_override: Optional[str] = None
+
+
+def set_step_backend(backend: Optional[str]) -> None:
+    """Process-wide step-core backend override ('auto' | 'ref' |
+    'pallas'); None restores env-var/auto resolution."""
+    global _step_backend_override
+    if backend is not None and backend not in STEP_BACKENDS:
+        raise ValueError(f"unknown step backend {backend!r}; "
+                         f"expected one of {STEP_BACKENDS}")
+    _step_backend_override = backend
+
+
+def resolve_step_backend(backend: Optional[str] = None) -> str:
+    """Resolve to a concrete backend name ('ref' or 'pallas')."""
+    b = backend or _step_backend_override \
+        or os.environ.get("REPRO_FABRIC_KERNEL", "auto")
+    if b not in STEP_BACKENDS:
+        raise ValueError(f"unknown step backend {b!r}; "
+                         f"expected one of {STEP_BACKENDS}")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return b
 
 # How often each jitted engine entry has been TRACED (== compiled) since
 # import. Python side effects run only while tracing, so the increments
@@ -542,19 +581,24 @@ def _cc_update(p: SimParams, c, a, fmark, fstrength, can_dec):
     return jax.lax.switch(p.kind, branches, None)
 
 
-def step(geom: FabricGeometry, p: SimParams, state):
-    return _step_impl(geom, p, state, with_aux=False)
+def step(geom: FabricGeometry, p: SimParams, state,
+         backend: Optional[str] = None):
+    return _step_impl(geom, p, state, with_aux=False,
+                      backend=resolve_step_backend(backend))
 
 
-def step_debug(geom: FabricGeometry, p: SimParams, state):
+def step_debug(geom: FabricGeometry, p: SimParams, state,
+               backend: Optional[str] = None):
     """Like :func:`step` but also returns an aux dict of internal rates
     (injection, per-stage link loads/served rates, effective capacities)
     for the invariant test suite. The state update is the identical
     computation — the aux branch only adds read-only observers."""
-    return _step_impl(geom, p, state, with_aux=True)
+    return _step_impl(geom, p, state, with_aux=True,
+                      backend=resolve_step_backend(backend))
 
 
-def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
+def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
+               backend: str = "ref"):
     dt = p.dt
     # aggressor envelope: traceable function of sim time (no host callback)
     env_t = envelope_at(p.env, state["t"])
@@ -568,12 +612,9 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
     active = (geom.is_victim | (env_t > 0)) & alive
     gate = jnp.where(geom.is_victim, 1.0, env_t) * alive
     inject = state["c"] * gate
-    # NIC limit: a source's flows share its injection link
-    src_load = jnp.zeros((geom.n_src,), jnp.float32).at[geom.src_id].add(
-        inject)
-    scale = jnp.minimum(1.0, p.host_caps
-                        / jnp.maximum(src_load[geom.src_id], 1.0))
-    inject = inject * scale
+    # (The NIC injection limit now lives in the fused step core below —
+    # it has no data dependence on routing, so applying it after the
+    # path choice is bit-identical.)
 
     # ---- routing: traced per-cell policy (lax.switch over p.policy) ----
     # Static tables (fixed / ecmp / nslb) read precomputed host-side
@@ -583,10 +624,11 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
     # the branches and computed ONCE — the dominant engine entries are
     # batched (run_cells/_hetero evaluate every branch anyway), so
     # sharing the (F, K, H) occupancy gather halves its per-step cost.
-    occ_paths = state["q"] / p.qmax_bytes
-    score = jnp.max(occ_paths[geom.paths], axis=2) \
+    # ``occ`` is shared with the backpressure stage of the core.
+    occ = state["q"] / p.qmax_bytes
+    score = jnp.max(occ[geom.paths], axis=2) \
         + 0.05 * geom.path_len / jnp.maximum(geom.path_len[:, :1], 1)
-    score = jnp.where(jnp.arange(geom.paths.shape[1])[None, :]
+    score = jnp.where(np.arange(geom.paths.shape[1])[None, :]
                       < geom.n_paths[:, None], score, jnp.inf)
     best = jnp.argmin(score, axis=1)
     best_score = jnp.min(score, axis=1)
@@ -627,60 +669,32 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
         geom.paths, choice[:, None, None], axis=1)[:, 0]  # (F, H)
     valid = plinks < geom.L
 
-    # ---- lossless backpressure (credit/PFC head-of-line stall) ----
-    # A switch whose egress queue saturates exhausts upstream credits /
-    # emits PFC pauses; ingress links feeding that switch lose service,
-    # stalling flows that traverse it (victims included). The stall is
-    # weighted by the saturated egresses' share of the switch's traffic:
-    # pause frames only cover buffer pools filled by hot-destined
-    # packets, so a switch with one hot egress among many mostly-idle
-    # ones only mildly degrades unrelated ingress traffic. This is the
-    # congestion-tree mechanism behind the paper's Incast collapse.
-    # hol_factor == 0 (per-flow state, e.g. Slingshot) -> stall == 1.
-    occ_prev = state["q"] / p.qmax_bytes
-    sat_l = jnp.clip((occ_prev - p.hol_start)
-                     / (1.0 - p.hol_start), 0.0, 1.0)
-    # share weighted by buffered bytes: traffic draining through
-    # idle egresses holds no buffer and casts no backpressure
-    hot_q = jnp.zeros((geom.n_sw,), jnp.float32).at[
-        geom.src_sw].add(state["q"] * sat_l)
-    tot_q = jnp.zeros((geom.n_sw,), jnp.float32).at[
-        geom.src_sw].add(state["q"])
-    share = hot_q / jnp.maximum(tot_q, 1.0)
-    sw_sat = jnp.zeros((geom.n_sw,), jnp.float32).at[
-        geom.src_sw].max(sat_l)
-    stall = 1.0 - p.hol_factor * sw_sat * share
-    stall = stall.at[0].set(1.0)  # 0 == host endpoint
-    caps_eff = geom.caps_finite * stall[geom.dst_sw]
-
-    # ---- staged propagation + queues ----
-    # Paths are feed-forward by fabric stage (host -> leaf -> spine ->
-    # leaf -> host), so a flow's arrival rate at hop h is its injection
-    # rate scaled down by every oversubscribed upstream hop (FIFO fluid
-    # sharing). Queues then build only where arrivals genuinely exceed
-    # service — an aggressor that is bottlenecked at its own NIC no
-    # longer floods transit queues with phantom demand.
-    r = inject
-    arrival = jnp.zeros((geom.L + 1,), jnp.float32)
-    served_stage_max = jnp.zeros((geom.L + 1,), jnp.float32)
-    for h in range(plinks.shape[1]):
-        lk = plinks[:, h]
-        contrib = r * valid[:, h]
-        load = jnp.zeros((geom.L + 1,), jnp.float32).at[lk].add(contrib)
-        arrival = arrival + load
-        over = jnp.maximum(load / caps_eff, 1.0)
-        r = jnp.where(valid[:, h], r / over[lk], r)
-        if with_aux:
-            # post-division (served) rate this stage puts on each link —
-            # FIFO fluid sharing guarantees it never exceeds caps_eff
-            served = jnp.zeros((geom.L + 1,), jnp.float32).at[lk].add(
-                r * valid[:, h])
-            served_stage_max = jnp.maximum(served_stage_max, served)
-    a = r  # achieved end-to-end rate
-    q = jnp.clip(state["q"] + (arrival * (1.0 + p.burst_jitter)
-                               - caps_eff) * dt,
-                 0.0, p.qmax_bytes)
-    q = q.at[geom.L].set(0.0)
+    # ---- fused step core (NIC limit, backpressure stall, staged
+    # propagation, queue update) ----
+    # The memory-bound scatter/segment-sum core lives in repro.kernels:
+    # kernels/ref.py holds the original lax code verbatim (the oracle and
+    # CPU default), kernels/fabric_step.py the fused Pallas kernel. The
+    # physics — why backpressure is share-weighted, why propagation is
+    # feed-forward FIFO fluid sharing — is documented on the oracle and
+    # in DESIGN.md §13.
+    if backend == "pallas":
+        core = kernel_ops.fabric_step_core(
+            plinks, inject, geom.src_id, p.host_caps, state["q"], occ,
+            geom.caps_finite, geom.src_sw, geom.dst_sw, dt, p.qmax_bytes,
+            p.hol_factor, p.hol_start, p.burst_jitter,
+            n_src=geom.n_src, n_sw=geom.n_sw, with_aux=with_aux)
+    else:
+        core = kernel_ref.fabric_step_core(
+            plinks, inject, geom.src_id, p.host_caps, state["q"], occ,
+            geom.caps_finite, geom.src_sw, geom.dst_sw, dt, p.qmax_bytes,
+            p.hol_factor, p.hol_start, p.burst_jitter,
+            n_src=geom.n_src, n_sw=geom.n_sw, with_aux=with_aux)
+    inject = core["inject"]  # NIC-scaled
+    a = core["achieved"]  # achieved end-to-end rate
+    arrival = core["arrival"]
+    caps_eff = core["caps_eff"]
+    served_stage_max = core["served_stage_max"]
+    q = core["q_new"]
 
     # ---- signals ----
     # AI-ECN: threshold tracks a fraction of the observed queue so
@@ -736,7 +750,7 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
     # a job wrapping phase 0 completed one program iteration
     it = state["it"]
     slot = jnp.minimum(it, TDONE_SLOTS - 1)
-    onehot = jnp.arange(TDONE_SLOTS)[None, :] == slot[:, None]
+    onehot = _TDONE_ARANGE[None, :] == slot[:, None]
     t_done = jnp.where(wrap[:, None] & onehot, t_new, state["t_done"])
     it = it + wrap.astype(jnp.int32)
     # synchronization gap between iterations of the primary (measured)
@@ -765,7 +779,8 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool):
 
 
 def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
-              chunk: int, max_chunks: int, stride: int):
+              chunk: int, max_chunks: int, stride: int,
+              backend: str = "ref"):
     """Run one cell to ``n_iters`` victim iterations (or the step budget),
     chunked so the early exit happens at chunk granularity. Pure and
     vmap-able: under vmap the while_loop runs until every cell finishes."""
@@ -782,8 +797,10 @@ def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
 
     def body(carry):
         state, buf, k = carry
-        state, gp = jax.lax.scan(lambda s, _: step(geom, p, s), state, None,
-                                 length=chunk)
+        state, gp = jax.lax.scan(
+            lambda s, _: _step_impl(geom, p, s, with_aux=False,
+                                    backend=backend),
+            state, None, length=chunk)
         buf = jax.lax.dynamic_update_slice(buf, gp[::stride],
                                            (k * trace_chunk,))
         return state, buf, k + 1
@@ -796,43 +813,77 @@ def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
             "trace": buf, "chunks": k}
 
 
-@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride"))
-def run_cell(geom: FabricGeometry, p: SimParams, n_iters,
-             *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8):
+# The public entries resolve the step-core backend EAGERLY (a Python
+# string) and forward it as a static jit argument: a backend switch via
+# set_step_backend()/$REPRO_FABRIC_KERNEL is a different cache key, never
+# a stale compile. TRACE_COUNTS increments live in the inner jitted
+# functions so they still fire once per compile.
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride",
+                                   "backend"))
+def _run_cell_jit(geom, p, n_iters, *, chunk, max_chunks, stride, backend):
     TRACE_COUNTS["run_cell"] += 1
-    return _run_cell(geom, p, n_iters, chunk, max_chunks, stride)
+    return _run_cell(geom, p, n_iters, chunk, max_chunks, stride, backend)
 
 
-@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride"))
-def run_cells(geom: FabricGeometry, params: SimParams, n_iters,
-              *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8):
-    """Batched engine: ``params`` has a leading cell axis on every leaf.
-    One compile serves the whole grid; all cells advance in lockstep until
-    the slowest finishes."""
+def run_cell(geom: FabricGeometry, p: SimParams, n_iters,
+             *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8,
+             backend: Optional[str] = None):
+    return _run_cell_jit(geom, p, n_iters, chunk=chunk,
+                         max_chunks=max_chunks, stride=stride,
+                         backend=resolve_step_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride",
+                                   "backend"))
+def _run_cells_jit(geom, params, n_iters, *, chunk, max_chunks, stride,
+                   backend):
     TRACE_COUNTS["run_cells"] += 1
     return jax.vmap(
-        lambda pp: _run_cell(geom, pp, n_iters, chunk, max_chunks, stride)
+        lambda pp: _run_cell(geom, pp, n_iters, chunk, max_chunks, stride,
+                             backend)
     )(params)
 
 
-@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride"))
+def run_cells(geom: FabricGeometry, params: SimParams, n_iters,
+              *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8,
+              backend: Optional[str] = None):
+    """Batched engine: ``params`` has a leading cell axis on every leaf.
+    One compile serves the whole grid; all cells advance in lockstep until
+    the slowest finishes."""
+    return _run_cells_jit(geom, params, n_iters, chunk=chunk,
+                          max_chunks=max_chunks, stride=stride,
+                          backend=resolve_step_backend(backend))
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride",
+                                   "backend"))
+def _run_cells_hetero_jit(geoms, params, n_iters, *, chunk, max_chunks,
+                          stride, backend):
+    TRACE_COUNTS["run_cells_hetero"] += 1
+
+    def one_geom(g, ps):
+        return jax.vmap(
+            lambda pp: _run_cell(g, pp, n_iters, chunk, max_chunks, stride,
+                                 backend)
+        )(ps)
+
+    return jax.vmap(one_geom)(geoms, params)
+
+
 def run_cells_hetero(geoms: FabricGeometry, params: SimParams, n_iters,
                      *, chunk: int = 2048, max_chunks: int = 98,
-                     stride: int = 8):
+                     stride: int = 8, backend: Optional[str] = None):
     """Scale-batched engine: ``geoms`` is a stack of bucket-padded
     geometries (leading axis = topology cell) and ``params`` carries TWO
     leading axes — (topology cell, sub-cell) — so a whole
     (system x n_nodes) x (size x profile) grid runs in one compile.
     The nested vmap closes each geometry over its own sub-cell row, so
     path tables are not replicated per sub-cell."""
-    TRACE_COUNTS["run_cells_hetero"] += 1
-
-    def one_geom(g, ps):
-        return jax.vmap(
-            lambda pp: _run_cell(g, pp, n_iters, chunk, max_chunks, stride)
-        )(ps)
-
-    return jax.vmap(one_geom)(geoms, params)
+    return _run_cells_hetero_jit(geoms, params, n_iters, chunk=chunk,
+                                 max_chunks=max_chunks, stride=stride,
+                                 backend=resolve_step_backend(backend))
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,229 @@
+"""Fused Pallas kernel for the fabric simulator's per-step hot core.
+
+After PR 5 the whole characterization grid runs as one ``jit(vmap(vmap))``
+over the simulator scan, so the per-step scatter/segment-sum core of
+``fabric/simulator._step_impl`` dominates wall-clock: ~10 separate
+O(F*H) scatter/gather passes over the packed path table (``plinks``) —
+NIC segment-sum, three backpressure segment-reductions, and per hop a
+link-load scatter, an over-subscription gather, and (under ``step_debug``)
+a served-rate scatter. XLA lowers each as an independent HBM-round-trip
+scatter with full-size zero-init.
+
+This kernel fuses the whole core into ONE launch that keeps flow rows and
+per-link state resident in VMEM across hops (DESIGN.md §13):
+
+* Scatters/gathers become flow-blocked one-hot contractions: a
+  (block_flows, n_out) equality mask against a ``broadcasted_iota`` link
+  row, contracted on the MXU (``jnp.dot`` with fp32 accumulation). This
+  is the TPU-native segment-sum lowering — Mosaic has no vector scatter,
+  and the mask never touches HBM.
+* Segment-max (``sw_sat``) uses the same mask with a masked ``jnp.max``
+  (order-independent, so it is exact vs the reference scatter-max).
+* The H-hop loop is unrolled in-kernel (H is static geometry meta); the
+  per-flow rate vector ``r`` never leaves registers/VMEM between hops.
+
+Exactness contract: identical arithmetic to ``kernels.ref.fabric_step_core``
+except that one-hot contractions may sum a link's contributions in a
+different order than XLA's scatter-add — fp32-allclose always, and
+bit-exact whenever every (link, hop) has at most one contributing flow
+(tests/test_kernels.py pins both). The reference stays the default on CPU
+and in interpret mode; ``REPRO_FABRIC_KERNEL=pallas`` (or
+``simulator.set_step_backend``) routes the engine through this kernel.
+
+VMEM budget (defaults, fp32): the dominant residents are one
+(block_flows, L+1) one-hot tile (128 x 4096 -> 2 MiB), the per-link rows
+(q/occ/caps/arrival/load: 6 x (L+1) -> ~100 KiB at L=4096), and the
+per-flow rows (~4 x F). Flow/link axes are padded to block multiples with
+provably inert rows (pad flows inject 0 onto the sink; pad links have
+cap 1, queue 0, and are referenced by no path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _onehot(idx, n_out):
+    """(B,) int32 -> (B, n_out) fp32 equality mask (the scatter/gather
+    surrogate: dot(vals, onehot) == segment-sum, dot(onehot, col) ==
+    gather). iota is 2D (broadcasted_iota) per the Mosaic constraint."""
+    ids = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n_out), 1)
+    return (idx[:, None] == ids).astype(jnp.float32)
+
+
+def _kernel(plinks_ref, inject_ref, src_id_ref, host_caps_ref, q_ref,
+            occ_ref, caps_finite_ref, src_sw_ref, dst_sw_ref, s_ref,
+            *out_refs, sink: int, n_src: int, n_sw: int, bf: int, bl: int,
+            with_aux: bool):
+    inject_out_ref, a_ref, arrival_ref, qnew_ref, caps_eff_ref = out_refs[:5]
+    dt = s_ref[0, 0]
+    qmax_bytes = s_ref[0, 1]
+    hol_factor = s_ref[0, 2]
+    hol_start = s_ref[0, 3]
+    burst_jitter = s_ref[0, 4]
+
+    F, H = plinks_ref.shape          # flow axis padded to a bf multiple
+    Lp = q_ref.shape[1]              # link axis padded to a bl multiple
+    n_fb, n_lb = F // bf, Lp // bl
+
+    # ---- NIC limit: src_load segment-sum, then per-flow gather+scale ----
+    src_load = jnp.zeros((1, n_src), jnp.float32)
+    for fb in range(n_fb):
+        sl = slice(fb * bf, (fb + 1) * bf)
+        sel = _onehot(src_id_ref[0, sl], n_src)
+        src_load = src_load + jnp.dot(
+            inject_ref[0, sl][None, :], sel,
+            preferred_element_type=jnp.float32)
+    inj_blocks = []
+    for fb in range(n_fb):
+        sl = slice(fb * bf, (fb + 1) * bf)
+        sel = _onehot(src_id_ref[0, sl], n_src)
+        mine = jnp.dot(sel, src_load.T,
+                       preferred_element_type=jnp.float32)[:, 0]
+        scale = jnp.minimum(1.0, host_caps_ref[0, sl]
+                            / jnp.maximum(mine, 1.0))
+        inj_blocks.append((inject_ref[0, sl] * scale)[None, :])
+    inject = jnp.concatenate(inj_blocks, axis=1)  # (1, F), NIC-scaled
+    inject_out_ref[...] = inject
+
+    # ---- backpressure: hot_q/tot_q segment-sums + sw_sat segment-max ----
+    q_row = q_ref[...]
+    occ_row = occ_ref[...]
+    hot_q = jnp.zeros((1, n_sw), jnp.float32)
+    tot_q = jnp.zeros((1, n_sw), jnp.float32)
+    sw_sat = jnp.zeros((1, n_sw), jnp.float32)
+    for lb in range(n_lb):
+        sl = slice(lb * bl, (lb + 1) * bl)
+        sat_b = jnp.clip((occ_row[0, sl] - hol_start)
+                         / (1.0 - hol_start), 0.0, 1.0)
+        q_b = q_row[0, sl]
+        sel = _onehot(src_sw_ref[0, sl], n_sw)
+        hot_q = hot_q + jnp.dot((q_b * sat_b)[None, :], sel,
+                                preferred_element_type=jnp.float32)
+        tot_q = tot_q + jnp.dot(q_b[None, :], sel,
+                                preferred_element_type=jnp.float32)
+        # masked max: exact (order-free) surrogate of .at[].max on zeros
+        sw_sat = jnp.maximum(
+            sw_sat, jnp.max(sel * sat_b[:, None], axis=0)[None, :])
+    share = hot_q / jnp.maximum(tot_q, 1.0)
+    stall = 1.0 - hol_factor * sw_sat * share
+    sw_ids = jax.lax.broadcasted_iota(jnp.int32, (1, n_sw), 1)
+    stall = jnp.where(sw_ids == 0, 1.0, stall)  # 0 == host endpoint
+    ce_blocks = []
+    for lb in range(n_lb):
+        sl = slice(lb * bl, (lb + 1) * bl)
+        sel = _onehot(dst_sw_ref[0, sl], n_sw)
+        st = jnp.dot(sel, stall.T, preferred_element_type=jnp.float32)[:, 0]
+        ce_blocks.append((caps_finite_ref[0, sl] * st)[None, :])
+    caps_eff = jnp.concatenate(ce_blocks, axis=1)  # (1, Lp)
+    caps_eff_ref[...] = caps_eff
+
+    # ---- H-hop staged propagation: flow rows resident across hops ----
+    r = inject
+    arrival = jnp.zeros((1, Lp), jnp.float32)
+    served_max = jnp.zeros((1, Lp), jnp.float32)
+    for h in range(H):
+        load = jnp.zeros((1, Lp), jnp.float32)
+        for fb in range(n_fb):
+            sl = slice(fb * bf, (fb + 1) * bf)
+            lk = plinks_ref[sl, h]
+            contrib = r[0, sl] * (lk < sink).astype(jnp.float32)
+            load = load + jnp.dot(contrib[None, :], _onehot(lk, Lp),
+                                  preferred_element_type=jnp.float32)
+        arrival = arrival + load
+        over = jnp.maximum(load / caps_eff, 1.0)
+        r_blocks = []
+        served = jnp.zeros((1, Lp), jnp.float32)
+        for fb in range(n_fb):
+            sl = slice(fb * bf, (fb + 1) * bf)
+            lk = plinks_ref[sl, h]
+            validh = lk < sink
+            sel = _onehot(lk, Lp)
+            og = jnp.dot(sel, over.T,
+                         preferred_element_type=jnp.float32)[:, 0]
+            r_b = jnp.where(validh, r[0, sl] / og, r[0, sl])
+            r_blocks.append(r_b[None, :])
+            if with_aux:
+                served = served + jnp.dot(
+                    (r_b * validh.astype(jnp.float32))[None, :], sel,
+                    preferred_element_type=jnp.float32)
+        r = jnp.concatenate(r_blocks, axis=1)
+        if with_aux:
+            served_max = jnp.maximum(served_max, served)
+    a_ref[...] = r
+    arrival_ref[...] = arrival
+
+    # ---- queue update ----
+    link_ids = jax.lax.broadcasted_iota(jnp.int32, (1, Lp), 1)
+    q_new = jnp.clip(q_row + (arrival * (1.0 + burst_jitter)
+                              - caps_eff) * dt,
+                     0.0, qmax_bytes)
+    qnew_ref[...] = jnp.where(link_ids == sink, 0.0, q_new)
+    if with_aux:
+        out_refs[5][...] = served_max
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_src", "n_sw", "with_aux", "interpret", "block_flows", "block_links"))
+def fabric_step_core(plinks, inject, src_id, host_caps, q, occ, caps_finite,
+                     src_sw, dst_sw, dt, qmax_bytes, hol_factor, hol_start,
+                     burst_jitter, *, n_src: int, n_sw: int,
+                     with_aux: bool = False, interpret: bool = True,
+                     block_flows: int = 128, block_links: int = 256):
+    """Fused fabric-step core (one kernel launch). Same signature and
+    return dict as :func:`repro.kernels.ref.fabric_step_core` (the
+    oracle); ``interpret=True`` runs the kernel through the Pallas
+    interpreter (the only mode available off-TPU). Vmappable — the
+    batched engine entries (``run_cells``/``run_cells_hetero``) vmap this
+    along with the rest of the step."""
+    F, H = plinks.shape
+    Lp1 = q.shape[0]
+    sink = Lp1 - 1
+    bf = min(block_flows, _round_up(max(F, 1), 8))
+    bl = min(block_links, _round_up(Lp1, 8))
+    Fp, Lp = _round_up(max(F, 1), bf), _round_up(Lp1, bl)
+
+    def pad_f(x, value, dtype):
+        return jnp.pad(x.astype(dtype), (0, Fp - F), constant_values=value)
+
+    def pad_l(x, value, dtype):
+        return jnp.pad(x.astype(dtype), (0, Lp - Lp1), constant_values=value)
+
+    # inert padding: pad flows inject 0 onto the sink from source 0; pad
+    # links carry cap 1 / queue 0 and hang off switch 0 (the host bucket)
+    plinks_p = jnp.pad(plinks.astype(jnp.int32),
+                       ((0, Fp - F), (0, 0)), constant_values=sink)
+    args = (
+        plinks_p,
+        pad_f(inject, 0.0, jnp.float32)[None, :],
+        pad_f(src_id, 0, jnp.int32)[None, :],
+        pad_f(host_caps, 1.0, jnp.float32)[None, :],
+        pad_l(q, 0.0, jnp.float32)[None, :],
+        pad_l(occ, 0.0, jnp.float32)[None, :],
+        pad_l(caps_finite, 1.0, jnp.float32)[None, :],
+        pad_l(src_sw, 0, jnp.int32)[None, :],
+        pad_l(dst_sw, 0, jnp.int32)[None, :],
+        jnp.stack([dt, qmax_bytes, hol_factor, hol_start,
+                   burst_jitter]).astype(jnp.float32)[None, :],
+    )
+    fvec = jax.ShapeDtypeStruct((1, Fp), jnp.float32)
+    lvec = jax.ShapeDtypeStruct((1, Lp), jnp.float32)
+    out_shape = [fvec, fvec, lvec, lvec, lvec] + ([lvec] if with_aux else [])
+    outs = pl.pallas_call(
+        functools.partial(_kernel, sink=sink, n_src=n_src, n_sw=n_sw,
+                          bf=bf, bl=bl, with_aux=with_aux),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    inject_s, a, arrival, q_new, caps_eff = [o[0] for o in outs[:5]]
+    return {"inject": inject_s[:F], "achieved": a[:F],
+            "arrival": arrival[:Lp1], "q_new": q_new[:Lp1],
+            "caps_eff": caps_eff[:Lp1],
+            "served_stage_max": outs[5][0][:Lp1] if with_aux else None}

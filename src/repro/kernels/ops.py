@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import fabric_step as _fs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_reduce as _fr
 from repro.kernels import quant as _q
@@ -41,6 +42,15 @@ def ssm_scan(dA, dBx, h0, interpret=None, **kw):
 def fused_selective_scan(dt, A, B_coef, C_coef, x, h0, interpret=None, **kw):
     return _ss.fused_selective_scan(
         dt, A, B_coef, C_coef, x, h0,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def fabric_step_core(*args, interpret=None, **kw):
+    """Fused fabric-simulator step core (see kernels/fabric_step.py);
+    same signature/return dict as ref.fabric_step_core."""
+    return _fs.fabric_step_core(
+        *args,
         interpret=_default_interpret() if interpret is None else interpret,
         **kw)
 

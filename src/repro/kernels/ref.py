@@ -55,6 +55,79 @@ def fused_selective_scan(dt, A, B_coef, C_coef, x, h0):
     return y, hT
 
 
+def fabric_step_core(plinks, inject, src_id, host_caps, q, occ, caps_finite,
+                     src_sw, dst_sw, dt, qmax_bytes, hol_factor, hol_start,
+                     burst_jitter, *, n_src: int, n_sw: int,
+                     with_aux: bool = False):
+    """Oracle for the fused fabric-step kernel: the memory-bound core of
+    one simulator step (repro.core.fabric.simulator._step_impl), extracted
+    VERBATIM from the pre-kernel ``lax`` code so this stays the bit-exact
+    default path on CPU and in interpret mode.
+
+    Covers, in order (DESIGN.md §13):
+
+    * NIC injection limiting — ``src_load`` segment-sum over ``src_id``,
+    * backpressure/PFC head-of-line stall — ``hot_q``/``tot_q`` segment
+      sums and the ``sw_sat`` segment-max over ``src_sw``, gathered back
+      through ``dst_sw`` into per-link effective capacities,
+    * the H-hop staged-propagation loop — per-hop link-load scatter, FIFO
+      fluid over-subscription division, arrival accumulation (plus the
+      per-stage served-rate observer when ``with_aux``),
+    * the queue update (offered load vs effective capacity, clipped to
+      ``[0, qmax]``, sink pinned to 0).
+
+    Everything upstream (phase gating, routing choice) and downstream
+    (ECN signals, CC update, phase bookkeeping) stays in the simulator —
+    those are cheap elementwise/gather ops; the scatters fused here are
+    the dominant per-step cost.
+
+    Args are per-cell (unbatched); the caller vmaps. ``plinks`` is the
+    chosen path's link ids (F, H) with pad == sink == ``q.shape[0] - 1``;
+    ``occ`` must equal ``q / qmax_bytes`` (computed once by the caller —
+    the routing score shares it). Returns a dict with ``inject`` (NIC-
+    scaled), ``achieved``, ``arrival``, ``q_new``, ``caps_eff``, and
+    ``served_stage_max`` (None unless ``with_aux``).
+    """
+    sink = q.shape[0] - 1
+    valid = plinks < sink
+    # ---- NIC limit: a source's flows share its injection link ----
+    src_load = jnp.zeros((n_src,), jnp.float32).at[src_id].add(inject)
+    scale = jnp.minimum(1.0, host_caps
+                        / jnp.maximum(src_load[src_id], 1.0))
+    inject = inject * scale
+    # ---- lossless backpressure (credit/PFC head-of-line stall) ----
+    sat_l = jnp.clip((occ - hol_start) / (1.0 - hol_start), 0.0, 1.0)
+    hot_q = jnp.zeros((n_sw,), jnp.float32).at[src_sw].add(q * sat_l)
+    tot_q = jnp.zeros((n_sw,), jnp.float32).at[src_sw].add(q)
+    share = hot_q / jnp.maximum(tot_q, 1.0)
+    sw_sat = jnp.zeros((n_sw,), jnp.float32).at[src_sw].max(sat_l)
+    stall = 1.0 - hol_factor * sw_sat * share
+    stall = stall.at[0].set(1.0)  # 0 == host endpoint
+    caps_eff = caps_finite * stall[dst_sw]
+    # ---- staged propagation + queues ----
+    r = inject
+    arrival = jnp.zeros((sink + 1,), jnp.float32)
+    served_stage_max = jnp.zeros((sink + 1,), jnp.float32)
+    for h in range(plinks.shape[1]):
+        lk = plinks[:, h]
+        contrib = r * valid[:, h]
+        load = jnp.zeros((sink + 1,), jnp.float32).at[lk].add(contrib)
+        arrival = arrival + load
+        over = jnp.maximum(load / caps_eff, 1.0)
+        r = jnp.where(valid[:, h], r / over[lk], r)
+        if with_aux:
+            served = jnp.zeros((sink + 1,), jnp.float32).at[lk].add(
+                r * valid[:, h])
+            served_stage_max = jnp.maximum(served_stage_max, served)
+    q_new = jnp.clip(q + (arrival * (1.0 + burst_jitter)
+                          - caps_eff) * dt,
+                     0.0, qmax_bytes)
+    q_new = q_new.at[sink].set(0.0)
+    return {"inject": inject, "achieved": r, "arrival": arrival,
+            "q_new": q_new, "caps_eff": caps_eff,
+            "served_stage_max": served_stage_max if with_aux else None}
+
+
 def quantize_int8(x, block: int = 256):
     """Per-block symmetric int8 quantization along the last axis.
     Returns (q int8, scales f32 with last dim = n_blocks)."""

@@ -263,3 +263,188 @@ def test_bursty_short_gap_worse_than_long_gap():
     long_ = bench.run_point(sysp, 32, "ring_allgather", "incast", v,
                             cong.bursty(2e-3, 8e-3), n_iters=25, warmup=5)
     assert long_.ratio > short.ratio + 0.05, (short.ratio, long_.ratio)
+
+
+# --------------------------------------------------------------------------
+# step micro-optimizations are bit-identical (ISSUE 6 satellite)
+# --------------------------------------------------------------------------
+
+def _old_step(geom, p, state):
+    """The pre-kernel `_step_impl` (with_aux=False path) VERBATIM — with
+    the duplicated `state["q"] / p.qmax_bytes`, the per-step
+    `jnp.arange` constants, and NIC limiting before routing. The
+    refactored step (shared occ, hoisted aranges, NIC limit inside the
+    fused core) must reproduce it bit-for-bit."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.envelopes import envelope_at
+    from repro.core.fabric import simulator as sim
+    from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
+                                           POLICY_FIXED, POLICY_FLOWLET,
+                                           POLICY_NSLB)
+
+    dt = p.dt
+    env_t = envelope_at(p.env, state["t"])
+    in_phase = (geom.flow_phase == state["ph"][geom.flow_job]) \
+        | (geom.flow_phase < 0)
+    alive = (state["rem"] > 0) & in_phase
+    active = (geom.is_victim | (env_t > 0)) & alive
+    gate = jnp.where(geom.is_victim, 1.0, env_t) * alive
+    inject = state["c"] * gate
+    src_load = jnp.zeros((geom.n_src,), jnp.float32).at[geom.src_id].add(
+        inject)
+    scale = jnp.minimum(1.0, p.host_caps
+                        / jnp.maximum(src_load[geom.src_id], 1.0))
+    inject = inject * scale
+
+    occ_paths = state["q"] / p.qmax_bytes
+    score = jnp.max(occ_paths[geom.paths], axis=2) \
+        + 0.05 * geom.path_len / jnp.maximum(geom.path_len[:, :1], 1)
+    score = jnp.where(jnp.arange(geom.paths.shape[1])[None, :]
+                      < geom.n_paths[:, None], score, jnp.inf)
+    best = jnp.argmin(score, axis=1)
+    best_score = jnp.min(score, axis=1)
+
+    def _hysteresis(anchor):
+        a_score = jnp.take_along_axis(score, anchor[:, None], 1)[:, 0]
+        return jnp.where(a_score > best_score + 0.10, best, anchor)
+
+    def _route_adaptive(_):
+        return _hysteresis(geom.spray_choice), state["rc"]
+
+    def _route_flowlet(_):
+        rc = jnp.where(state["idle"] >= p.flowlet_gap_s,
+                       _hysteresis(state["rc"]), state["rc"])
+        return rc, rc
+
+    route_branches = [None] * 5
+    route_branches[POLICY_FIXED] = lambda _: (geom.fixed_choice, state["rc"])
+    route_branches[POLICY_ECMP] = lambda _: (geom.ecmp_choice, state["rc"])
+    route_branches[POLICY_NSLB] = lambda _: (geom.nslb_choice, state["rc"])
+    route_branches[POLICY_ADAPTIVE] = _route_adaptive
+    route_branches[POLICY_FLOWLET] = _route_flowlet
+    choice, rc_new = jax.lax.switch(p.policy, route_branches, None)
+    idle_new = jnp.where(active, 0.0, state["idle"] + dt)
+    plinks = jnp.take_along_axis(
+        geom.paths, choice[:, None, None], axis=1)[:, 0]
+    valid = plinks < geom.L
+
+    occ_prev = state["q"] / p.qmax_bytes
+    sat_l = jnp.clip((occ_prev - p.hol_start)
+                     / (1.0 - p.hol_start), 0.0, 1.0)
+    hot_q = jnp.zeros((geom.n_sw,), jnp.float32).at[
+        geom.src_sw].add(state["q"] * sat_l)
+    tot_q = jnp.zeros((geom.n_sw,), jnp.float32).at[
+        geom.src_sw].add(state["q"])
+    share = hot_q / jnp.maximum(tot_q, 1.0)
+    sw_sat = jnp.zeros((geom.n_sw,), jnp.float32).at[
+        geom.src_sw].max(sat_l)
+    stall = 1.0 - p.hol_factor * sw_sat * share
+    stall = stall.at[0].set(1.0)
+    caps_eff = geom.caps_finite * stall[geom.dst_sw]
+
+    r = inject
+    arrival = jnp.zeros((geom.L + 1,), jnp.float32)
+    for h in range(plinks.shape[1]):
+        lk = plinks[:, h]
+        contrib = r * valid[:, h]
+        load = jnp.zeros((geom.L + 1,), jnp.float32).at[lk].add(contrib)
+        arrival = arrival + load
+        over = jnp.maximum(load / caps_eff, 1.0)
+        r = jnp.where(valid[:, h], r / over[lk], r)
+    a = r
+    q = jnp.clip(state["q"] + (arrival * (1.0 + p.burst_jitter)
+                               - caps_eff) * dt,
+                 0.0, p.qmax_bytes)
+    q = q.at[geom.L].set(0.0)
+
+    adapted = jnp.clip(0.9 * state["thresh"] + 0.1 * (0.5 * q + p.kmin
+                                                      * p.qmax_bytes),
+                       0.05 * p.qmax_bytes, p.kmax * p.qmax_bytes)
+    thresh = jnp.where(p.thresh_adapt > 0, adapted, state["thresh"])
+    over_thresh = q > thresh
+    fmark = jnp.any(over_thresh[plinks] & valid, axis=1)
+    strength_l = jnp.clip((q - thresh)
+                          / (p.kmax * p.qmax_bytes - thresh + 1.0),
+                          0.0, 1.0)
+    fstrength = jnp.max(jnp.where(valid, strength_l[plinks], 0.0), axis=1)
+
+    can_dec = state["last_dec"] >= p.cc_interval_s
+    c, dec = sim._cc_update(p, state["c"], a, fmark, fstrength, can_dec)
+    c = jnp.where(active, c, state["c"])
+    dec = dec & active
+    c = jnp.clip(c, p.min_rate_frac * p.host_caps, p.host_caps)
+    last_dec = jnp.where(dec, 0.0, state["last_dec"] + dt)
+
+    rem = state["rem"] - a * dt
+    t_new = state["t"] + dt
+    busy = jnp.zeros((geom.n_jobs,), jnp.int32).at[geom.flow_job].max(
+        (in_phase & (rem > 0)).astype(jnp.int32)) > 0
+    gap = state["gap"] - dt * (~busy)
+    advance = ~busy & (gap <= 0)
+    ph_next = jnp.where(advance,
+                        (state["ph"] + 1) % geom.n_phases, state["ph"])
+    wrap = advance & (state["ph"] + 1 >= geom.n_phases)
+    gap = jnp.where(advance,
+                    jnp.take_along_axis(geom.phase_gap, ph_next[:, None],
+                                        axis=1)[:, 0], gap)
+    enter = advance[geom.flow_job] \
+        & ((geom.flow_phase == ph_next[geom.flow_job])
+           | (geom.flow_phase < 0))
+    rem = jnp.where(enter, p.bytes_per_iter, rem)
+    it = state["it"]
+    slot = jnp.minimum(it, sim.TDONE_SLOTS - 1)
+    onehot = jnp.arange(sim.TDONE_SLOTS)[None, :] == slot[:, None]
+    t_done = jnp.where(wrap[:, None] & onehot, t_new, state["t_done"])
+    it = it + wrap.astype(jnp.int32)
+    q = jnp.where(wrap[0], q * p.iter_drain, q)
+
+    qdel = jnp.max(jnp.where(valid, (q / geom.caps_finite)[plinks], 0.0),
+                   axis=1)
+    mean_qdel = jnp.sum(qdel * geom.is_victim) / jnp.maximum(
+        jnp.sum(geom.is_victim), 1)
+    vict_goodput = jnp.sum(a * geom.is_victim)
+
+    new_state = {"c": c, "rem": rem, "q": q, "arr": arrival,
+                 "thresh": thresh, "last_dec": last_dec,
+                 "rc": rc_new, "idle": idle_new,
+                 "fbytes": state["fbytes"] + a * dt,
+                 "ph": ph_next, "gap": gap, "it": it, "t_done": t_done,
+                 "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
+    return new_state, vict_goodput
+
+
+@pytest.mark.parametrize("policy", [routing.POLICY_FIXED,
+                                    routing.POLICY_ADAPTIVE,
+                                    routing.POLICY_FLOWLET])
+def test_step_microopt_bit_identical(policy):
+    """Hoisting the shared occupancy, replacing per-step jnp.arange with
+    host constants, and moving the NIC limit after routing must not
+    change a single bit of any state leaf or the goodput output."""
+    import jax
+    from repro.core.fabric import simulator as sim
+    from repro.core.fabric import topology as topo_lib
+
+    topo = topo_lib.leaf_spine(8)
+    vidx, aidx = cong.interleaved_split(8)
+    nodes = np.arange(8)
+    flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx],
+                               "ring_allreduce", "incast", 1 << 20,
+                               phased=True)
+    geom = sim.make_geometry(topo, flows)
+    p = sim.make_params(cc_lib.dcqcn(), dt=2e-6,
+                        bytes_per_iter=flows.bytes_per_iter,
+                        host_caps=flows.host_caps,
+                        env=cong.steady().params(), policy=policy,
+                        flowlet_gap_s=50e-6)
+    old = jax.jit(lambda s: _old_step(geom, p, s))
+    new = jax.jit(lambda s: sim.step(geom, p, s))
+    state = sim.init_state(geom, p)
+    for i in range(30):
+        s_old, g_old = old(state)
+        s_new, g_new = new(state)
+        assert np.array_equal(np.asarray(g_old), np.asarray(g_new)), i
+        for k in s_old:
+            assert np.array_equal(np.asarray(s_old[k]),
+                                  np.asarray(s_new[k])), (i, k)
+        state = s_new

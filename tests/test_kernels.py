@@ -1,6 +1,8 @@
 """Per-kernel allclose tests: sweep shapes/dtypes in interpret=True mode and
 assert against the pure-jnp oracles in kernels/ref.py (brief deliverable (c)).
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -189,3 +191,245 @@ def test_fused_accumulate_fp32_accumulation():
     want = ref.fused_accumulate(acc, x, scale=1.0)
     np.testing.assert_array_equal(np.asarray(out, np.float32),
                                   np.asarray(want, np.float32))
+
+
+# --------------------------------------------------------------------------
+# fused fabric step core (kernels/fabric_step.py vs kernels/ref.py)
+# --------------------------------------------------------------------------
+
+# Contract (DESIGN.md §13): the Pallas kernel replaces XLA scatter-adds
+# with one-hot matmul segment-sums, which may accumulate a segment in a
+# different order — parity is fp32-allclose (the atol is ~1 byte/s on
+# ~1e9 B/s magnitudes), and bit-exact whenever each segment has at most
+# one contributor (single summand => no reassociation).
+FS_TOL = dict(rtol=2e-4, atol=1.0)
+
+
+def _core_case(rng, F, H, L, n_src, n_sw):
+    return dict(
+        plinks=rng.randint(0, L + 1, size=(F, H)).astype(np.int32),
+        inject=(rng.rand(F) * 1e9).astype(np.float32),
+        src_id=rng.randint(0, n_src, size=F).astype(np.int32),
+        host_caps=((rng.rand(F) + 0.5) * 1e9).astype(np.float32),
+        q=(rng.rand(L + 1) * 1e6).astype(np.float32),
+        caps_finite=((rng.rand(L + 1) + 0.1) * 1e9).astype(np.float32),
+        src_sw=rng.randint(0, n_sw, size=L + 1).astype(np.int32),
+        dst_sw=rng.randint(0, n_sw, size=L + 1).astype(np.int32))
+
+
+def _run_core(fn, case, n_src, n_sw, with_aux, qmax=2e6):
+    occ = case["q"] / np.float32(qmax)
+    return fn(case["plinks"], case["inject"], case["src_id"],
+              case["host_caps"], case["q"], occ, case["caps_finite"],
+              case["src_sw"], case["dst_sw"], jnp.float32(2e-6),
+              jnp.float32(qmax), jnp.float32(0.6), jnp.float32(0.7),
+              jnp.float32(0.05), n_src=n_src, n_sw=n_sw, with_aux=with_aux)
+
+
+def _assert_core_match(got, want, tol=FS_TOL, msg=""):
+    for k in want:
+        if want[k] is None:
+            assert got[k] is None, k
+            continue
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   err_msg=f"{msg}{k}", **tol)
+
+
+FS_SHAPES = [
+    # (F, H, L, n_src, n_sw) — incl. non-multiples of the 128/256 blocks
+    (7, 3, 13, 4, 5),
+    (130, 5, 300, 33, 17),
+    (256, 4, 255, 8, 8),
+    (1, 1, 2, 1, 2),
+]
+
+
+@pytest.mark.parametrize("shape", FS_SHAPES)
+@pytest.mark.parametrize("with_aux", [False, True])
+def test_fabric_step_core(shape, with_aux):
+    F, H, L, n_src, n_sw = shape
+    rng = np.random.RandomState(hash(shape) & 0xFFFF)
+    case = _core_case(rng, F, H, L, n_src, n_sw)
+    want = _run_core(ref.fabric_step_core, case, n_src, n_sw, with_aux)
+    got = _run_core(ops.fabric_step_core, case, n_src, n_sw, with_aux)
+    _assert_core_match(got, want)
+
+
+def test_fabric_step_core_bit_exact_disjoint():
+    """With at most one contributor per (link, hop), per source, and per
+    switch, every one-hot contraction sums a single nonzero term — the
+    kernel must then be BIT-identical to the scatter reference."""
+    F, H = 6, 3
+    L = F * H + 4  # room for distinct links per (flow, hop)
+    n_src, n_sw = F + 1, L + 2
+    rng = np.random.RandomState(0)
+    case = _core_case(rng, F, H, L, n_src, n_sw)
+    case["plinks"] = np.arange(F * H, dtype=np.int32).reshape(F, H)
+    case["src_id"] = np.arange(F, dtype=np.int32)
+    case["src_sw"] = np.arange(1, L + 2, dtype=np.int32)
+    case["dst_sw"] = np.roll(np.arange(1, L + 2, dtype=np.int32), 1)
+    want = _run_core(ref.fabric_step_core, case, n_src, n_sw, True)
+    got = _run_core(ops.fabric_step_core, case, n_src, n_sw, True)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]), err_msg=k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(F=st.integers(1, 70), H=st.integers(1, 5), L=st.integers(1, 120),
+       n_src=st.integers(1, 12), n_sw=st.integers(2, 10),
+       seed=st.integers(0, 2 ** 16))
+def test_fabric_step_core_property(F, H, L, n_src, n_sw, seed):
+    """Property: kernel == oracle on random geometries of any shape."""
+    rng = np.random.RandomState(seed)
+    case = _core_case(rng, F, H, L, n_src, n_sw)
+    want = _run_core(ref.fabric_step_core, case, n_src, n_sw, True)
+    got = _run_core(ops.fabric_step_core, case, n_src, n_sw, True)
+    _assert_core_match(got, want)
+
+
+# ---- engine-level parity: the backend switch routes the whole step ----
+
+def _engine_cell(coll, policy, n_nodes=8):
+    from repro.core import congestion as cong
+    from repro.core.fabric import cc as cc_lib, simulator as sim
+    from repro.core.fabric import topology as topo_lib
+
+    topo = topo_lib.leaf_spine(n_nodes)
+    vidx, aidx = cong.interleaved_split(n_nodes)
+    nodes = np.arange(n_nodes)
+    flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx], coll,
+                               "incast", 1 << 20, phased=True)
+    geom = sim.make_geometry(topo, flows)
+    p = sim.make_params(cc_lib.dcqcn(), dt=2e-6,
+                        bytes_per_iter=flows.bytes_per_iter,
+                        host_caps=flows.host_caps,
+                        env=cong.steady().params(), policy=policy,
+                        flowlet_gap_s=50e-6)
+    return geom, p
+
+
+@pytest.mark.parametrize("policy", list(range(5)))
+def test_fabric_step_engine_parity_policies(policy):
+    """Lock-step step_debug parity (state AND aux observers) between the
+    ref and pallas backends under every traced routing policy."""
+    import jax
+    from repro.core.fabric import simulator as sim
+
+    geom, p = _engine_cell("ring_allreduce", policy)
+    s_ref = jax.jit(lambda s: sim.step_debug(geom, p, s, backend="ref"))
+    s_pal = jax.jit(lambda s: sim.step_debug(geom, p, s, backend="pallas"))
+    state = sim.init_state(geom, p)
+    for i in range(25):
+        nr, gr, ar = s_ref(state)
+        npal, gpal, apal = s_pal(state)
+        np.testing.assert_allclose(np.asarray(gpal), np.asarray(gr),
+                                   err_msg=f"goodput step {i}", **FS_TOL)
+        for k in nr:
+            np.testing.assert_allclose(np.asarray(npal[k]),
+                                       np.asarray(nr[k]),
+                                       err_msg=f"state {i} {k}", **FS_TOL)
+        for k in ar:
+            np.testing.assert_allclose(np.asarray(apal[k]),
+                                       np.asarray(ar[k]),
+                                       err_msg=f"aux {i} {k}", **FS_TOL)
+        state = nr
+
+
+def test_fabric_step_engine_parity_wildcard_phases():
+    """The ring collectives' uniform schedules emit wildcard-phase flow
+    rows (flow_phase < 0) — the gating happens upstream of the core, but
+    the kernel must agree through phase transitions too."""
+    import jax
+    from repro.core.fabric import simulator as sim
+
+    geom, p = _engine_cell("ring_allgather", 3)
+    assert bool(np.any(np.asarray(geom.flow_phase) < 0))
+    s_ref = jax.jit(lambda s: sim.step_debug(geom, p, s, backend="ref"))
+    s_pal = jax.jit(lambda s: sim.step_debug(geom, p, s, backend="pallas"))
+    state = sim.init_state(geom, p)
+    for i in range(25):
+        nr, _, _ = s_ref(state)
+        npal, _, _ = s_pal(state)
+        for k in nr:
+            np.testing.assert_allclose(np.asarray(npal[k]),
+                                       np.asarray(nr[k]),
+                                       err_msg=f"{i} {k}", **FS_TOL)
+        state = nr
+
+
+def test_fabric_step_run_cells_backend_parity():
+    """Full vmapped runs through run_cells: both backends must agree on
+    the discrete outputs (iterations, chunk count) exactly and on the
+    continuous ones within fp32 tolerance."""
+    import jax
+    from repro.core.fabric import simulator as sim
+
+    geom, p0 = _engine_cell("ring_allreduce", 0)
+    _, p3 = _engine_cell("ring_allreduce", 3)
+    params = sim.stack_params([p0, p3])
+    n = jnp.asarray(3, jnp.int32)
+    kw = dict(chunk=128, max_chunks=12, stride=8)
+    out_r = sim.run_cells(geom, params, n, backend="ref", **kw)
+    out_p = sim.run_cells(geom, params, n, backend="pallas", **kw)
+    for k in ("it", "chunks"):
+        np.testing.assert_array_equal(np.asarray(out_r[k]),
+                                      np.asarray(out_p[k]), err_msg=k)
+    for k in ("t_done", "t", "fbytes"):
+        np.testing.assert_allclose(np.asarray(out_p[k]),
+                                   np.asarray(out_r[k]),
+                                   err_msg=k, rtol=2e-3, atol=1e-5)
+
+
+def test_fabric_step_hetero_padded_bucket_parity():
+    """run_cells_hetero over bucket-padded stacked geometries (the PR 4
+    scale-batched path): pallas must match ref through the nested vmap,
+    and padding must stay inert under the kernel."""
+    import jax
+    from repro.core.fabric import simulator as sim
+
+    g1, p1 = _engine_cell("ring_allreduce", 1, n_nodes=6)
+    g2, p2 = _engine_cell("alltoall", 4, n_nodes=8)
+    dims = sim.bucket_dims([g1, g2])
+    geoms = sim.stack_geometries([sim.pad_geometry(g, dims)
+                                  for g in (g1, g2)])
+
+    def pad_p(p, g):
+        F = dims.n_flows
+        pad = lambda x: jnp.concatenate(
+            [x, jnp.zeros((F - x.shape[0],), x.dtype)])
+        return dataclasses.replace(p, bytes_per_iter=pad(p.bytes_per_iter),
+                                   host_caps=pad(p.host_caps))
+    params = sim.stack_params([pad_p(p1, g1), pad_p(p2, g2)])
+    params = jax.tree_util.tree_map(lambda x: x[:, None], params)
+    n = jnp.asarray(2, jnp.int32)
+    kw = dict(chunk=128, max_chunks=10, stride=8)
+    out_r = sim.run_cells_hetero(geoms, params, n, backend="ref", **kw)
+    out_p = sim.run_cells_hetero(geoms, params, n, backend="pallas", **kw)
+    for k in ("it", "chunks"):
+        np.testing.assert_array_equal(np.asarray(out_r[k]),
+                                      np.asarray(out_p[k]), err_msg=k)
+    for k in ("t_done", "t"):
+        np.testing.assert_allclose(np.asarray(out_p[k]),
+                                   np.asarray(out_r[k]),
+                                   err_msg=k, rtol=2e-3, atol=1e-5)
+
+
+def test_fabric_step_backend_resolution():
+    """Env var / override / explicit-argument resolution order, and the
+    auto default (ref off-TPU)."""
+    from repro.core.fabric import simulator as sim
+
+    assert sim.resolve_step_backend() == "ref"  # CPU container
+    assert sim.resolve_step_backend("pallas") == "pallas"
+    sim.set_step_backend("pallas")
+    try:
+        assert sim.resolve_step_backend() == "pallas"
+        assert sim.resolve_step_backend("ref") == "ref"  # arg wins
+    finally:
+        sim.set_step_backend(None)
+    assert sim.resolve_step_backend() == "ref"
+    with pytest.raises(ValueError):
+        sim.resolve_step_backend("mosaic")
+    with pytest.raises(ValueError):
+        sim.set_step_backend("xla")
