@@ -27,12 +27,13 @@ import numpy as np
 from repro.core import congestion as cong
 from repro.core import traffic
 from repro.core.fabric.simulator import (TDONE_SLOTS, FabricGeometry,
-                                         SimParams, bucket_dims,
-                                         check_iter_budget, make_geometry,
-                                         make_params, pad_geometry, run_cell,
-                                         run_cells, run_cells_hetero,
-                                         stack_geometries, stack_params,
-                                         summarize)
+                                         SimParams, _drop_warmup,
+                                         bucket_dims, check_iter_budget,
+                                         make_geometry, make_params,
+                                         pad_geometry, run_cell, run_cells,
+                                         run_cells_hetero, stack_geometries,
+                                         stack_params, summarize)
+from repro.core.fabric.routing import splitmix64
 from repro.core.fabric.systems import (SystemPreset, default_policy,
                                        get_system)
 
@@ -58,6 +59,12 @@ class BenchResult:
     # mixes: ((job_name, t_mean_s, n_done), ...) over jobs that closed
     # at least one program iteration
     job_times: tuple = ()
+    # False when either lane finished inside its warmup window: the
+    # reported means are then last-iteration estimates, not steady state
+    warmup_ok: bool = True
+    # did-not-finish: a lane completed ZERO iterations within the step
+    # budget — times/ratio are NaN and the cell must not be scored
+    dnf: bool = False
 
 
 def victim_label(victim_coll: str, phased: bool) -> str:
@@ -80,21 +87,55 @@ def resolve_victim_label(victim_coll: str, phased: bool, jobs=None) -> str:
 def mean_iter_time(res, lat: float) -> float:
     """Reported per-iteration time of one summarized run: mean simulated
     iteration + analytic per-step latency + mean queueing delay (shared
-    by the grid runners and mitigation.search)."""
+    by the grid runners and mitigation.search). A run that completed ZERO
+    iterations is NaN — an explicit did-not-finish the callers must flag
+    (BenchResult.dnf / CellRun.dnf), never a silent ``inf`` that poisons
+    downstream ratios and Pareto scores."""
     if len(res.iter_times) == 0:
-        return float("inf")
+        return float("nan")
     return float(np.mean(res.iter_times)) + lat + res.mean_qdelay_s
 
 
 _TOPO_CACHE: dict = {}
 
 
+def _fn_fingerprint(fn) -> tuple:
+    """Identity-relevant fingerprint of a topology builder: bytecode,
+    constants (nested code objects repr to a stable per-object string),
+    closure values and defaults — so a SystemPreset re-registered under
+    the same name with a different builder cannot hit a stale entry."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return (repr(fn),)
+    consts = tuple(
+        c if isinstance(c, (int, float, str, bytes, bool, type(None)))
+        else repr(c) for c in code.co_consts)
+    closure = tuple(repr(c.cell_contents)
+                    for c in (getattr(fn, "__closure__", None) or ()))
+    return (code.co_code, consts, closure, repr(fn.__defaults__))
+
+
+def _topo_cache_key(system: SystemPreset, n: int) -> tuple:
+    return (system.name, system.fabric, system.machine_nodes,
+            system.k_max, system.static_routing,
+            _fn_fingerprint(system.make_topology), n)
+
+
+def clear_topology_cache() -> None:
+    """Drop every cached machine topology (tests that mutate presets)."""
+    _TOPO_CACHE.clear()
+
+
 def machine_topology(system: SystemPreset, n_nodes: int = 0):
     """Full-machine topology (cached — reused across heatmap cells).
     Testbed systems (``machine_nodes == 0``) are built at the allocation
-    size instead, so scale sweeps over them actually scale the fabric."""
+    size instead, so scale sweeps over them actually scale the fabric.
+    The cache keys on the preset's identity-relevant fields plus a
+    fingerprint of the builder itself, NOT just the name: two presets
+    sharing a name but differing in fabric/size/builder get distinct
+    entries."""
     n = system.machine_nodes or (n_nodes or 8)
-    key = (system.name, n)
+    key = _topo_cache_key(system, n)
     if key not in _TOPO_CACHE:
         _TOPO_CACHE[key] = system.make_topology(n)
     return _TOPO_CACHE[key]
@@ -105,11 +146,18 @@ def allocate(system: SystemPreset, n_nodes: int, seed: int = 7) -> np.ndarray:
     the machine (the paper: 'we cannot fully control job allocations' —
     busy TOP500 systems hand out fragmented node sets). The interleaved
     victim/aggressor split then alternates within and across switches —
-    the paper's maximal-sharing design (§III-A)."""
+    the paper's maximal-sharing design (§III-A).
+
+    ``seed`` and ``n_nodes`` mix through the pinned splitmix64, so
+    distinct (seed, n_nodes) pairs draw unrelated allocations — the old
+    additive ``seed + n_nodes`` seeding made (7, 8) and (8, 7) identical
+    draws (and neighboring scales near-copies of each other)."""
     machine = system.machine_nodes or n_nodes
     if n_nodes >= machine:
         return np.arange(machine)
-    rng = np.random.RandomState(seed + n_nodes)
+    mixed = splitmix64((np.uint64(seed) << np.uint64(32))
+                       | np.uint64(np.uint32(n_nodes)))
+    rng = np.random.RandomState(int(mixed & np.uint64(0xFFFFFFFF)))
     return np.sort(rng.choice(machine, size=n_nodes, replace=False))
 
 
@@ -203,7 +251,8 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
                nodes: Optional[np.ndarray] = None, *,
                phased: bool = False,
                jobs: Optional[Sequence[traffic.JobSpec]] = None,
-               policy_tables: bool = False) -> GridCase:
+               policy_tables: bool = False,
+               seed: int = 7) -> GridCase:
     """Build the flow program + geometry once for a whole grid of cells.
 
     Default: the paper's two-job victim/aggressor split. ``phased=True``
@@ -219,7 +268,7 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
     if topo is None:
         topo = machine_topology(system, n_nodes)
     if nodes is None:
-        nodes = allocate(system, n_nodes)
+        nodes = allocate(system, n_nodes, seed=seed)
     if jobs is not None:
         jobs = traffic.split_nodes(nodes, list(jobs))
         jobs = [dataclasses.replace(j, vector_bytes=1.0)
@@ -277,7 +326,7 @@ def _job_times(out, case: GridCase, *, n_iters, warmup, cell) -> tuple:
         if n_done <= 0:
             continue
         times = np.diff(np.concatenate([[0.0], td[ji][:n_done]]))
-        times = times[warmup:] if n_done > warmup else times
+        times, _ = _drop_warmup(times, n_done, warmup)
         if len(times):
             rows.append((name, float(np.mean(times)), n_done))
     return tuple(rows)
@@ -318,13 +367,15 @@ def _grid_results(case: GridCase, out: dict, sizes: Sequence[float],
                             chunk=chunk, stride=stride,
                             cell=cell_prefix + (ci,))
             t_c = mean_iter_time(res, lat)
+            dnf = base.n_done == 0 or res.n_done == 0
             results.append(BenchResult(
                 system=case.system.name, n_nodes=case.n_nodes,
                 victim=victim_label(case.victim_coll, case.primary_phased),
                 aggressor=case.aggr_coll or "none", profile=prof.label(),
                 vector_bytes=float(v), t_uncongested_s=t_u,
                 t_congested_s=t_c,
-                ratio=t_u / t_c if t_c > 0 else 0.0,
+                ratio=float("nan") if dnf
+                else (t_u / t_c if t_c > 0 else 0.0),
                 victim_goodput_gbps=float(
                     np.mean(res.victim_rate_trace[-200:]) * 8 / 1e9)
                 if len(res.victim_rate_trace) else 0.0,
@@ -332,8 +383,21 @@ def _grid_results(case: GridCase, out: dict, sizes: Sequence[float],
                 job_times=_job_times(out, case, n_iters=n_iters,
                                      warmup=warmup,
                                      cell=cell_prefix + (ci,)),
+                warmup_ok=base.warmup_ok and res.warmup_ok,
+                dnf=dnf,
             ))
     return results
+
+
+def _resolve_launcher(mesh, launcher, shard_axis: str = "cell"):
+    """Launcher resolution shared by the grid runners and the mitigation
+    search: an explicit ``launcher`` callable wins; a ``mesh`` alone gets
+    launch.sweep's per-device dispatcher over ``shard_axis`` (imported
+    lazily — core never depends on the launch layer at import time)."""
+    if launcher is not None or mesh is None:
+        return launcher
+    from repro.launch.sweep import device_launcher
+    return device_launcher(mesh, shard_axis=shard_axis)
 
 
 def run_grid(system: Union[SystemPreset, Sequence[ScaleCell]], n_nodes: int,
@@ -343,6 +407,7 @@ def run_grid(system: Union[SystemPreset, Sequence[ScaleCell]], n_nodes: int,
              max_steps: int = 200_000, chunk: int = 2048,
              trace_stride: int = 8, phased: bool = False,
              jobs: Optional[Sequence[traffic.JobSpec]] = None,
+             mesh=None, launcher=None,
              ) -> List[BenchResult]:
     """All (vector size x profile) cells of one experiment in a single
     batched call: a per-size baseline (aggressors/background jobs off)
@@ -355,13 +420,22 @@ def run_grid(system: Union[SystemPreset, Sequence[ScaleCell]], n_nodes: int,
     scale-batched engine (:func:`run_scale_grid`): geometries are padded
     to bucket shapes and stacked, so the whole cross-scale sweep costs
     one compile per bucket instead of one per scale. ``n_nodes`` is
-    ignored in that mode."""
-    if not isinstance(system, SystemPreset):
-        return run_scale_grid(system, victim_coll, aggr_coll, sizes,
+    ignored in that mode.
+
+    ``mesh`` (or an explicit ``launcher``) shards the batched call
+    across devices via the sharded sweep launcher (launch/sweep.py);
+    single-system grids reroute through the scale-batched path, whose
+    bucket padding is provably inert, so sharded and plain runs stay
+    bit-identical."""
+    if not isinstance(system, SystemPreset) or mesh is not None \
+            or launcher is not None:
+        cells = system if not isinstance(system, SystemPreset) \
+            else [(system, n_nodes)]
+        return run_scale_grid(cells, victim_coll, aggr_coll, sizes,
                               profiles, n_iters=n_iters, warmup=warmup,
                               dt=dt, max_steps=max_steps, chunk=chunk,
                               trace_stride=trace_stride, phased=phased,
-                              jobs=jobs)
+                              jobs=jobs, mesh=mesh, launcher=launcher)
     check_iter_budget(n_iters)
     case = build_case(system, n_nodes, victim_coll, aggr_coll,
                       phased=phased, jobs=jobs)
@@ -399,6 +473,76 @@ def bucket_stack(geoms: Sequence[FabricGeometry]):
     return dims, stack_geometries([pad_geometry(g, dims) for g in geoms])
 
 
+@dataclasses.dataclass
+class PendingGrid:
+    """A dispatched (but not yet marshalled) scale grid. ``launch_scale_
+    grid`` returns immediately after the async device dispatch; calling
+    :meth:`results` blocks on the outputs and marshals them — so several
+    grids can be launched back-to-back and their host-side result
+    assembly overlaps the device compute of the grids still in flight
+    (the sweep launcher's async pipeline)."""
+
+    cases: List[GridCase]
+    out: object  # dict-like of batched run outputs (possibly lazy)
+    sizes: tuple
+    profiles: tuple
+    all_dts: List[List[float]]
+    n_iters: int
+    warmup: int
+    chunk: int
+    stride: int
+
+    def results(self) -> List[BenchResult]:
+        return [r for k, case in enumerate(self.cases)
+                for r in _grid_results(case, self.out, self.sizes,
+                                       self.profiles, self.all_dts[k],
+                                       n_iters=self.n_iters,
+                                       warmup=self.warmup, chunk=self.chunk,
+                                       stride=self.stride,
+                                       cell_prefix=(k,))]
+
+
+def launch_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
+                      aggr_coll: str, sizes: Sequence[float],
+                      profiles: Sequence[cong.Profile], *, n_iters: int = 60,
+                      warmup: int = 10, dt: Optional[float] = None,
+                      max_steps: int = 200_000, chunk: int = 2048,
+                      trace_stride: int = 8, phased: bool = False,
+                      jobs: Optional[Sequence[traffic.JobSpec]] = None,
+                      mesh=None, launcher=None) -> PendingGrid:
+    """Build + DISPATCH a cross-scale grid and return a
+    :class:`PendingGrid` without blocking on device compute (jax
+    dispatch is async; the sharded launcher additionally fans the cell
+    axis out across devices). ``results()`` marshals."""
+    check_iter_budget(n_iters)
+    launcher = _resolve_launcher(mesh, launcher)
+    cases = []
+    for sysname, n in cells:
+        sysp = get_system(sysname) if isinstance(sysname, str) else sysname
+        cases.append(build_case(sysp, int(n), victim_coll, aggr_coll,
+                                phased=phased, jobs=jobs))
+    sizes, profiles = tuple(sizes), tuple(profiles)
+    if not cases:
+        return PendingGrid([], {}, sizes, profiles, [], n_iters, warmup,
+                           chunk, trace_stride)
+
+    dims, stacked = bucket_stack([case.geom for case in cases])
+    all_dts = [_cell_dts(case, sizes, len(profiles), dt, case.lat())
+               for case in cases]
+    sub_cells = [(float(v), prof) for v in sizes
+                 for prof in [cong.no_congestion()] + list(profiles)]
+    params = stack_params([
+        stack_params([case.cell_params(v, prof, d, n_flows=dims.n_flows)
+                      for (v, prof), d in zip(sub_cells, all_dts[k])])
+        for k, case in enumerate(cases)])
+    run = launcher if launcher is not None else run_cells_hetero
+    out = run(stacked, params, jnp.asarray(n_iters, jnp.int32),
+              chunk=chunk, max_chunks=-(-max_steps // chunk),
+              stride=trace_stride)
+    return PendingGrid(cases, out, sizes, profiles, all_dts, n_iters,
+                       warmup, chunk, trace_stride)
+
+
 def run_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
                    aggr_coll: str, sizes: Sequence[float],
                    profiles: Sequence[cong.Profile], *, n_iters: int = 60,
@@ -406,7 +550,7 @@ def run_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
                    max_steps: int = 200_000, chunk: int = 2048,
                    trace_stride: int = 8, phased: bool = False,
                    jobs: Optional[Sequence[traffic.JobSpec]] = None,
-                   ) -> List[BenchResult]:
+                   mesh=None, launcher=None) -> List[BenchResult]:
     """A whole cross-scale experiment — heterogeneous ``(system,
     n_nodes)`` cells x (vector size x profile) — in one batched call per
     geometry *bucket*.
@@ -420,33 +564,19 @@ def run_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
     compiles the simulator ONCE per GeometryDims bucket (asserted via
     simulator.TRACE_COUNTS in tests/test_grid.py). Results come back in
     input order: cells major, then sizes, then baseline/profiles
-    (matching a sequential per-cell run_grid concatenation)."""
-    check_iter_budget(n_iters)
-    cases = []
-    for sysname, n in cells:
-        sysp = get_system(sysname) if isinstance(sysname, str) else sysname
-        cases.append(build_case(sysp, int(n), victim_coll, aggr_coll,
-                                phased=phased, jobs=jobs))
-    if not cases:
-        return []
+    (matching a sequential per-cell run_grid concatenation).
 
-    dims, stacked = bucket_stack([case.geom for case in cases])
-    all_dts = [_cell_dts(case, sizes, len(profiles), dt, case.lat())
-               for case in cases]
-    sub_cells = [(float(v), prof) for v in sizes
-                 for prof in [cong.no_congestion()] + list(profiles)]
-    params = stack_params([
-        stack_params([case.cell_params(v, prof, d, n_flows=dims.n_flows)
-                      for (v, prof), d in zip(sub_cells, all_dts[k])])
-        for k, case in enumerate(cases)])
-    out = run_cells_hetero(stacked, params, jnp.asarray(n_iters, jnp.int32),
-                           chunk=chunk, max_chunks=-(-max_steps // chunk),
-                           stride=trace_stride)
-    return [r for k, case in enumerate(cases)
-            for r in _grid_results(case, out, sizes, profiles, all_dts[k],
-                                   n_iters=n_iters, warmup=warmup,
-                                   chunk=chunk, stride=trace_stride,
-                                   cell_prefix=(k,))]
+    ``mesh``/``launcher`` shard the dispatch across devices
+    (launch/sweep.py); the default per-device dispatcher is bit-identical
+    to the single-device path (asserted in tests and the CI smoke).
+    Launch/collect are split in :func:`launch_scale_grid` for callers
+    that overlap several grids."""
+    return launch_scale_grid(cells, victim_coll, aggr_coll, sizes, profiles,
+                             n_iters=n_iters, warmup=warmup, dt=dt,
+                             max_steps=max_steps, chunk=chunk,
+                             trace_stride=trace_stride, phased=phased,
+                             jobs=jobs, mesh=mesh,
+                             launcher=launcher).results()
 
 
 def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
@@ -454,14 +584,17 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
               profile: cong.Profile, *, n_iters: int = 60, warmup: int = 10,
               dt: Optional[float] = None, max_steps: int = 200_000,
               return_traces: bool = False, phased: bool = False,
-              jobs: Optional[Sequence[traffic.JobSpec]] = None):
+              jobs: Optional[Sequence[traffic.JobSpec]] = None,
+              seed: int = 7):
     """One heatmap cell: baseline (aggressors off) vs congested run.
 
-    Implemented as a 2-cell grid (baseline + congested batched in one call).
+    Implemented as a 2-cell grid (baseline + congested batched in one
+    call). ``seed`` picks the allocation draw (collapse depth under
+    incast is placement-dependent; see allocate()).
     """
     check_iter_budget(n_iters)
     case = build_case(system, n_nodes, victim_coll, aggr_coll,
-                      phased=phased, jobs=jobs)
+                      phased=phased, jobs=jobs, seed=seed)
     lat = case.lat()
     if dt is None:
         dt = choose_dt(case.topo, case.n_victims, vector_bytes, lat,
@@ -479,18 +612,21 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
                          chunk=chunk, stride=stride, cell=1)
     t_u = mean_iter_time(base, lat)
     t_c = mean_iter_time(cong_res, lat)
+    dnf = base.n_done == 0 or cong_res.n_done == 0
     res = BenchResult(
         system=system.name, n_nodes=n_nodes,
         victim=victim_label(case.victim_coll, case.primary_phased),
         aggressor=case.aggr_coll or "none", profile=profile.kind,
         vector_bytes=vector_bytes, t_uncongested_s=t_u, t_congested_s=t_c,
-        ratio=t_u / t_c if t_c > 0 else 0.0,
+        ratio=float("nan") if dnf else (t_u / t_c if t_c > 0 else 0.0),
         victim_goodput_gbps=float(np.mean(cong_res.victim_rate_trace[-200:])
                                   * 8 / 1e9)
         if len(cong_res.victim_rate_trace) else 0.0,
         n_iters=(base.n_done, cong_res.n_done),
         job_times=_job_times(out, case, n_iters=n_iters, warmup=warmup,
                              cell=1),
+        warmup_ok=base.warmup_ok and cong_res.warmup_ok,
+        dnf=dnf,
     )
     if return_traces:
         return res, base, cong_res

@@ -122,6 +122,46 @@ def check_iter_budget(n_iters: int) -> None:
             "buffer (raise TDONE_SLOTS or lower n_iters)")
 
 
+# ---------------------------------------------------------------------------
+# Persistent compilation cache: reruns of the engine skip XLA compilation
+# entirely (the jaxpr trace still runs, but it is milliseconds next to the
+# multi-second XLA compile of the chunked while_loop). Enabled either
+# explicitly (launch.sweep / launch.dryrun) or ambiently via
+# $REPRO_COMPILE_CACHE_DIR, which every public engine entry checks lazily.
+# ---------------------------------------------------------------------------
+
+_COMPILE_CACHE_DIR: Optional[str] = None
+COMPILE_CACHE_ENV = "REPRO_COMPILE_CACHE_DIR"
+
+
+def ensure_compile_cache(cache_dir: Optional[str] = None, *,
+                         min_compile_secs: float = 0.0) -> Optional[str]:
+    """Point XLA's persistent compilation cache at ``cache_dir`` (or
+    ``$REPRO_COMPILE_CACHE_DIR``). Idempotent and cheap once configured;
+    returns the active cache dir, or None when neither source names one.
+    ``min_entry_size_bytes=-1`` caches every entry regardless of size —
+    on CPU the engine executables are small but cost seconds to build."""
+    global _COMPILE_CACHE_DIR
+    if _COMPILE_CACHE_DIR is not None:
+        # first activation wins: a process-wide cache must not silently
+        # re-point mid-run (half the entries would land elsewhere)
+        return _COMPILE_CACHE_DIR
+    cache_dir = cache_dir or os.environ.get(COMPILE_CACHE_ENV)
+    if not cache_dir:
+        return None
+    cache_dir = os.path.abspath(cache_dir)
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                      float(min_compile_secs))
+    try:
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except AttributeError:  # pragma: no cover - older jax without the knob
+        pass
+    _COMPILE_CACHE_DIR = cache_dir
+    return cache_dir
+
+
 @dataclasses.dataclass
 class FlowSet:
     """Static flow structure for one experiment (a packed traffic
@@ -830,6 +870,7 @@ def _run_cell_jit(geom, p, n_iters, *, chunk, max_chunks, stride, backend):
 def run_cell(geom: FabricGeometry, p: SimParams, n_iters,
              *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8,
              backend: Optional[str] = None):
+    ensure_compile_cache()
     return _run_cell_jit(geom, p, n_iters, chunk=chunk,
                          max_chunks=max_chunks, stride=stride,
                          backend=resolve_step_backend(backend))
@@ -852,6 +893,7 @@ def run_cells(geom: FabricGeometry, params: SimParams, n_iters,
     """Batched engine: ``params`` has a leading cell axis on every leaf.
     One compile serves the whole grid; all cells advance in lockstep until
     the slowest finishes."""
+    ensure_compile_cache()
     return _run_cells_jit(geom, params, n_iters, chunk=chunk,
                           max_chunks=max_chunks, stride=stride,
                           backend=resolve_step_backend(backend))
@@ -874,16 +916,116 @@ def _run_cells_hetero_jit(geoms, params, n_iters, *, chunk, max_chunks,
 
 def run_cells_hetero(geoms: FabricGeometry, params: SimParams, n_iters,
                      *, chunk: int = 2048, max_chunks: int = 98,
-                     stride: int = 8, backend: Optional[str] = None):
+                     stride: int = 8, backend: Optional[str] = None,
+                     mesh=None, shard_axis: str = "cell",
+                     donate: bool = False):
     """Scale-batched engine: ``geoms`` is a stack of bucket-padded
     geometries (leading axis = topology cell) and ``params`` carries TWO
     leading axes — (topology cell, sub-cell) — so a whole
     (system x n_nodes) x (size x profile) grid runs in one compile.
     The nested vmap closes each geometry over its own sub-cell row, so
-    path tables are not replicated per sub-cell."""
-    return _run_cells_hetero_jit(geoms, params, n_iters, chunk=chunk,
-                                 max_chunks=max_chunks, stride=stride,
-                                 backend=resolve_step_backend(backend))
+    path tables are not replicated per sub-cell.
+
+    ``mesh`` partitions the batch across a 1-D device mesh with
+    ``jax.shard_map`` instead: ``shard_axis='cell'`` splits the topology
+    cells (geometries travel with their cells), ``'lane'`` splits the
+    sub-cell lanes (geometries replicate — the mitigation search's
+    candidate axis). Batches are padded to a mesh multiple by repeating
+    lane 0 (finished lanes freeze under the vmapped while_loop, so real
+    lanes are unaffected) and sliced back. NOTE: multi-device shard_map
+    executables may differ from the single-device path by ~1 ulp in the
+    float accumulators (XLA's partitioned compile reassociates — a
+    measured, deterministic effect; DESIGN.md §14). The bit-exact
+    multi-device path is launch.sweep's per-device dispatch."""
+    ensure_compile_cache()
+    backend = resolve_step_backend(backend)
+    if mesh is None:
+        return _run_cells_hetero_jit(geoms, params, n_iters, chunk=chunk,
+                                     max_chunks=max_chunks, stride=stride,
+                                     backend=backend)
+    if shard_axis not in ("cell", "lane"):
+        raise ValueError(f"shard_axis must be 'cell' or 'lane', "
+                         f"got {shard_axis!r}")
+    n_dev = int(mesh.devices.size)
+    axis, = mesh.axis_names
+    if shard_axis == "cell":
+        n_real = _leading_dim(geoms)
+        geoms = pad_batch(geoms, n_dev)
+        params = pad_batch(params, n_dev)
+    else:
+        n_real = _leading_dim(params, axis=1)
+        params = pad_batch(params, n_dev, axis=1)
+    fn = _sharded_hetero_jit(mesh, axis, shard_axis, chunk, max_chunks,
+                             stride, backend, donate)
+    out = fn(geoms, params, n_iters)
+    take = 0 if shard_axis == "cell" else 1
+    return {k: jax.lax.slice_in_dim(v, 0, n_real, axis=take)
+            for k, v in out.items()}
+
+
+def _leading_dim(tree, axis: int = 0) -> int:
+    return int(jax.tree_util.tree_leaves(tree)[0].shape[axis])
+
+
+def pad_batch(tree, multiple: int, axis: int = 0):
+    """Pad every leaf's ``axis`` up to a multiple of ``multiple`` by
+    repeating index 0 (a real, already-validated cell — never garbage:
+    padded lanes run redundant work and are sliced off, and under the
+    vmapped while_loop they cannot perturb real lanes)."""
+    n = _leading_dim(tree, axis)
+    target = -(-n // multiple) * multiple
+    if target == n:
+        return tree
+
+    def pad(x):
+        fill = np.repeat(np.take(np.asarray(x), [0], axis=axis),
+                         target - n, axis=axis)
+        return np.concatenate([np.asarray(x), fill], axis=axis)
+
+    return jax.tree_util.tree_map(pad, tree)
+
+
+# One jitted shard_map entry per (mesh, shard axis, static engine args):
+# meshes are hashable, so the builder memoizes — re-launching on the same
+# mesh reuses the executable (asserted via TRACE_COUNTS in test_sweep.py).
+_SHARDED_JITS: dict = {}
+
+
+def _sharded_hetero_jit(mesh, axis: str, shard_axis: str, chunk: int,
+                        max_chunks: int, stride: int, backend: str,
+                        donate: bool):
+    key = (mesh, axis, shard_axis, chunk, max_chunks, stride, backend,
+           donate)
+    fn = _SHARDED_JITS.get(key)
+    if fn is not None:
+        return fn
+    from jax.sharding import PartitionSpec as P
+    if shard_axis == "cell":
+        in_specs = (P(axis), P(axis), P())
+        out_specs = P(axis)
+    else:  # lane: geometries replicate, sub-cell lanes split
+        in_specs = (P(), P(None, axis), P())
+        out_specs = P(None, axis)
+
+    def sharded(geoms, params, n_iters):
+        TRACE_COUNTS["run_cells_hetero_sharded"] += 1
+
+        def shard(g, ps, ni):
+            return jax.vmap(lambda gg, row: jax.vmap(
+                lambda pp: _run_cell(gg, pp, ni, chunk, max_chunks,
+                                     stride, backend))(row))(g, ps)
+
+        return jax.shard_map(shard, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+                                 geoms, params, n_iters)
+
+    # buffer donation frees the params stack for the outputs; XLA CPU
+    # does not implement donation (it would only warn), so gate on backend
+    donate_argnums = (1,) if donate and jax.default_backend() != "cpu" \
+        else ()
+    fn = jax.jit(sharded, donate_argnums=donate_argnums)
+    _SHARDED_JITS[key] = fn
+    return fn
 
 
 # --------------------------------------------------------------------------
@@ -893,11 +1035,26 @@ def run_cells_hetero(geoms: FabricGeometry, params: SimParams, n_iters,
 
 @dataclasses.dataclass
 class SimResult:
-    iter_times: np.ndarray  # (n_done,) seconds per victim iteration
+    iter_times: np.ndarray  # (n_done - warmup,) seconds per victim iteration
     n_done: int
     mean_qdelay_s: float  # mean victim queueing delay per step
     victim_rate_trace: np.ndarray  # (T_sub,) aggregate victim goodput B/s
     time_trace: np.ndarray
+    # False when the run finished too few iterations to discard the full
+    # warmup prefix (n_done <= warmup): iter_times then holds only the
+    # LAST completed iteration (closest to steady state) — a usable but
+    # warmup-tainted estimate that callers must not report silently
+    warmup_ok: bool = True
+
+
+def _drop_warmup(times: np.ndarray, n_done: int, warmup: int):
+    """Discard the warmup prefix of per-iteration times. When the run
+    completed fewer than warmup+1 iterations, every iteration is warmup:
+    keep only the last one (never silently average a warmup-dominated
+    prefix — the pre-fix behavior) and report ``warmup_ok=False``."""
+    if n_done > warmup:
+        return times[warmup:], True
+    return times[max(0, n_done - 1):], False
 
 
 def summarize(out: dict, *, n_iters: int, warmup: int, dt: float,
@@ -911,7 +1068,7 @@ def summarize(out: dict, *, n_iters: int, warmup: int, dt: float,
     n_done = min(int(pick(out["it"])[job]), n_iters, TDONE_SLOTS)
     t_done = pick(out["t_done"])[job][:n_done]
     iter_times = np.diff(np.concatenate([[0.0], t_done]))
-    iter_times = iter_times[warmup:] if n_done > warmup else iter_times
+    iter_times, warmup_ok = _drop_warmup(iter_times, n_done, warmup)
     total_t = float(pick(out["t"])) or 1e-9
     n_valid = int(pick(out["chunks"])) * (chunk // stride)
     trace = pick(out["trace"])[:n_valid]
@@ -921,6 +1078,7 @@ def summarize(out: dict, *, n_iters: int, warmup: int, dt: float,
         mean_qdelay_s=float(pick(out["qd_acc"])) / total_t,
         victim_rate_trace=trace,
         time_trace=np.arange(n_valid) * stride * dt,
+        warmup_ok=warmup_ok,
     )
 
 

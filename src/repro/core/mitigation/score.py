@@ -76,32 +76,42 @@ class CandidateScore:
     t_base_worst_rel: float  # worst baseline time relative to default (1.0 =
     # no uncongested-cost; >1 = the mitigation taxes the uncongested case)
     cells: Tuple[CellRun, ...] = ()
+    # panel cells this candidate did not finish (zero completed
+    # iterations): excluded from every axis above; a candidate that DNFs
+    # its WHOLE panel has NaN axes and is dropped from the frontier
+    n_dnf: int = 0
 
 
 def aggregate(runs: Sequence[CellRun],
               default_label: str = "default") -> List[CandidateScore]:
     """Fold per-cell runs into per-candidate scorecards. Baseline cost is
     measured against the ``default_label`` candidate's uncongested time
-    on the same cell (the fabric's shipped config)."""
+    on the same cell (the fabric's shipped config). DNF cells (zero
+    completed iterations — NaN times) are counted in ``n_dnf`` and
+    excluded from the axes rather than silently averaged."""
     by_cand: Dict[str, List[CellRun]] = {}
     for r in runs:
         by_cand.setdefault(r.candidate, []).append(r)
     base_t = {r.cell: r.t_uncongested_s
-              for r in by_cand.get(default_label, [])}
+              for r in by_cand.get(default_label, []) if not r.dnf}
     out = []
     for cand, rs in by_cand.items():
+        ok = [r for r in rs if not r.dnf]
         rel = [r.t_uncongested_s / base_t[r.cell]
-               for r in rs if base_t.get(r.cell, 0) > 0]
+               for r in ok if base_t.get(r.cell, 0) > 0]
         out.append(CandidateScore(
             candidate=cand,
-            ratio_min=min(r.ratio for r in rs),
-            ratio_mean=float(np.mean([r.ratio for r in rs])),
+            ratio_min=min(r.ratio for r in ok) if ok else float("nan"),
+            ratio_mean=float(np.mean([r.ratio for r in ok]))
+            if ok else float("nan"),
             aggr_gbps=float(np.mean(
                 [8e-9 * r.aggr_bytes / max(r.sim_time_s, 1e-9)
-                 for r in rs])),
-            jain=float(np.mean([r.jain for r in rs])),
+                 for r in ok])) if ok else float("nan"),
+            jain=float(np.mean([r.jain for r in ok]))
+            if ok else float("nan"),
             t_base_worst_rel=max(rel) if rel else 1.0,
-            cells=tuple(rs)))
+            cells=tuple(rs),
+            n_dnf=len(rs) - len(ok)))
     return out
 
 
@@ -115,10 +125,18 @@ def _dominates(a: CandidateScore, b: CandidateScore, eps: float) -> bool:
     return ge and gt
 
 
+def _scored(scores: Sequence[CandidateScore]) -> List[CandidateScore]:
+    """Candidates with at least one finished panel cell (full-panel DNF
+    leaves every axis NaN — incomparable, excluded from the frontier)."""
+    return [s for s in scores if np.isfinite(s.ratio_min)]
+
+
 def pareto_frontier(scores: Sequence[CandidateScore],
                     eps: float = 1e-3) -> List[CandidateScore]:
     """Non-dominated candidates on (victim ratio, aggressor goodput,
-    fairness), sorted by worst-cell ratio descending."""
+    fairness), sorted by worst-cell ratio descending. Full-panel DNF
+    candidates are excluded (their axes are NaN)."""
+    scores = _scored(scores)
     front = [s for s in scores
              if not any(_dominates(o, s, eps) for o in scores if o is not s)]
     return sorted(front, key=lambda s: (-s.ratio_min, -s.jain,
@@ -129,10 +147,15 @@ def pick_winner(scores: Sequence[CandidateScore],
                 baseline_slack: float = 0.02) -> CandidateScore:
     """Scalarized per-fabric winner: best worst-cell ratio (then
     fairness, then aggressor goodput) among candidates whose uncongested
-    baseline stays within ``baseline_slack`` of the fabric default."""
-    ok = [s for s in scores if s.t_base_worst_rel <= 1.0 + baseline_slack]
+    baseline stays within ``baseline_slack`` of the fabric default.
+    Full-panel DNF candidates never win (unless EVERY candidate DNF'd,
+    in which case the first is returned as a flagged placeholder)."""
+    finished = _scored(scores)
+    if not finished:  # nothing completed: surface the failure, don't crash
+        return scores[0]
+    ok = [s for s in finished if s.t_base_worst_rel <= 1.0 + baseline_slack]
     if not ok:  # every candidate taxes the baseline; fall back to all
-        ok = list(scores)
+        ok = finished
     return max(ok, key=lambda s: (round(s.ratio_min, 3),
                                   round(s.jain, 3), s.aggr_gbps))
 

@@ -188,6 +188,11 @@ class CellRun:
     aggr_bytes: float  # delivered by aggressor/background flows
     sim_time_s: float
     jain: float  # fairness over victim flows' delivered bytes
+    # a lane completed zero iterations within the step budget: times and
+    # ratio are NaN; score.aggregate excludes the cell (marked DNF)
+    # instead of folding NaN into the Pareto axes
+    dnf: bool = False
+    warmup_ok: bool = True
 
 
 def _jain(x: np.ndarray) -> float:
@@ -202,12 +207,20 @@ def run_candidates(panel: Sequence[PanelCell],
                    candidates: Sequence[Candidate], *,
                    n_iters: int = 12, warmup: int = 3,
                    max_steps: int = 200_000, chunk: int = 2048,
-                   stride: int = 8) -> List[CellRun]:
+                   stride: int = 8, mesh=None,
+                   launcher=None) -> List[CellRun]:
     """Score every candidate on every panel cell in one batched call:
     geometries pad into one GeometryDims bucket (routing is traced data,
     so mixed-policy candidates share the compile) and params carry
-    (cell, candidate x {baseline, congested}) lanes."""
+    (cell, candidate x {baseline, congested}) lanes.
+
+    ``mesh``/``launcher`` shard the candidate LANES across devices via
+    the sweep launcher (launch/sweep.py): panels are typically a handful
+    of cells but candidate batches grow with the search space, so the
+    lane axis is the one worth splitting. The default per-device
+    dispatcher keeps results bit-identical to the single-device call."""
     bench.check_iter_budget(n_iters)
+    launcher = bench._resolve_launcher(mesh, launcher, shard_axis="lane")
     # policy_tables: candidates cross-select ECMP/NSLB as traced data,
     # so every panel geometry must carry the full static tables
     cases = [bench.build_case(c.system, c.n_nodes, c.victim, c.aggressor,
@@ -227,10 +240,11 @@ def run_candidates(panel: Sequence[PanelCell],
                 lane.append(cand.apply(p, case.policy))
         rows.append(sim.stack_params(lane))
     params = sim.stack_params(rows)
-    out = sim.run_cells_hetero(stacked, params,
-                               jnp.asarray(n_iters, jnp.int32), chunk=chunk,
-                               max_chunks=-(-max_steps // chunk),
-                               stride=stride)
+    run = launcher if launcher is not None else sim.run_cells_hetero
+    out = run(stacked, params,
+              jnp.asarray(n_iters, jnp.int32), chunk=chunk,
+              max_chunks=-(-max_steps // chunk),
+              stride=stride)
     runs: List[CellRun] = []
     fbytes = np.asarray(out["fbytes"])
     t_all = np.asarray(out["t"])
@@ -240,23 +254,27 @@ def run_candidates(panel: Sequence[PanelCell],
         vmask = np.asarray(case.is_victim, bool)
         for ki, cand in enumerate(candidates):
             base_i, cong_i = 2 * ki, 2 * ki + 1
-            t_u = bench.mean_iter_time(
-                sim.summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
-                              chunk=chunk, stride=stride,
-                              cell=(ci, base_i)), lat)
-            t_c = bench.mean_iter_time(
-                sim.summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
-                              chunk=chunk, stride=stride,
-                              cell=(ci, cong_i)), lat)
+            base = sim.summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
+                                 chunk=chunk, stride=stride,
+                                 cell=(ci, base_i))
+            res = sim.summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
+                                chunk=chunk, stride=stride,
+                                cell=(ci, cong_i))
+            t_u = bench.mean_iter_time(base, lat)
+            t_c = bench.mean_iter_time(res, lat)
+            dnf = base.n_done == 0 or res.n_done == 0
             fb = fbytes[ci, cong_i][:F]
             runs.append(CellRun(
                 cell=cell.name, candidate=cand.label(),
                 t_uncongested_s=t_u, t_congested_s=t_c,
-                ratio=t_u / t_c if t_c > 0 else 0.0,
+                ratio=float("nan") if dnf
+                else (t_u / t_c if t_c > 0 else 0.0),
                 victim_bytes=float(fb[vmask].sum()),
                 aggr_bytes=float(fb[~vmask].sum()),
                 sim_time_s=float(t_all[ci, cong_i]),
-                jain=_jain(fb[vmask])))
+                jain=_jain(fb[vmask]),
+                dnf=dnf,
+                warmup_ok=base.warmup_ok and res.warmup_ok))
     return runs
 
 

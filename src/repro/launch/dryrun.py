@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.jax_compat import force_host_device_count
+
+# APPEND the device-count flag (replacing only a previous device-count
+# entry): user-set XLA_FLAGS must survive a dryrun import.
+force_host_device_count(512)
 
 # Everything below runs with 512 placeholder host devices (dry-run ONLY —
 # smoke tests and benches see the real single device; see the brief).
@@ -30,11 +35,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     real dryrun artifact without the full 512-device sweep."""
     import dataclasses as _dc
 
-    import jax
+    from repro.core.fabric.simulator import ensure_compile_cache
 
-    jax.config.update("jax_compilation_cache_dir",
-                      os.path.abspath(os.path.join(ARTIFACTS, "..", "xla_cache")))
-    jax.config.update("jax_persistent_cache_min_compile_time_secs", 10.0)
+    ensure_compile_cache(os.path.join(ARTIFACTS, "..", "xla_cache"),
+                         min_compile_secs=10.0)
 
     from repro.configs import get_config
     from repro.configs.base import SHAPES

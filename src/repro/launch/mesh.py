@@ -37,6 +37,19 @@ def make_host_mesh(data: int = 0, model: int = 1):
     return compat_make_mesh((data, model), ("data", "model"))
 
 
+def make_sweep_mesh(n_devices: int = 0):
+    """1-D ``('cells',)`` mesh for the sharded sweep launcher
+    (launch/sweep.py): experiment batches shard along one axis — topology
+    cells or candidate lanes — so the mesh is flat over however many
+    (host) devices exist, or the first ``n_devices`` of them."""
+    import numpy as np
+
+    devs = jax.devices()
+    if n_devices:
+        devs = devs[:int(n_devices)]
+    return jax.sharding.Mesh(np.array(devs), ("cells",))
+
+
 def rules_for(cfg, mesh) -> AxisRules:
     """Derive AxisRules from an arch config and a mesh (DESIGN.md §4)."""
     names = tuple(mesh.axis_names)

@@ -280,3 +280,96 @@ def test_straggler_param():
                                  "ring_allgather", 4 << 20, slow_factor=0.2,
                                  n_iters=10, straggler=0)
     assert out["slowdown"] > 2.0
+
+# --------------------------------------------------------------------------
+# Measurement-correctness regressions (ISSUE 7 satellite batch)
+# --------------------------------------------------------------------------
+
+def _one_cell_out(n_iters=8, max_chunks=40):
+    sysp = systems.get_system("cresco8")
+    case = bench.build_case(sysp, 8, "ring_allgather", "incast")
+    dt = bench.choose_dt(case.topo, case.n_victims, 1 << 20, case.lat())
+    p = case.cell_params(1 << 20, cong.steady(), dt)
+    out = sim_lib.run_cell(case.geom, p, jnp.asarray(n_iters, jnp.int32),
+                           chunk=512, max_chunks=max_chunks, stride=8)
+    return out, dt
+
+
+def test_summarize_excludes_warmup_and_flags_contamination():
+    """A run whose completed-iteration count never clears the warmup
+    prefix must not average warmup iterations into iter_times (the old
+    behavior): it keeps only the last iteration and flags warmup_ok."""
+    out, dt = _one_cell_out(n_iters=8)
+    kw = dict(dt=dt, chunk=512, stride=8)
+    full = sim_lib.summarize(out, n_iters=8, warmup=2, **kw)
+    assert full.warmup_ok and full.n_done == 8
+    assert len(full.iter_times) == full.n_done - 2
+
+    tainted = sim_lib.summarize(out, n_iters=8, warmup=8, **kw)
+    assert not tainted.warmup_ok
+    assert len(tainted.iter_times) == 1  # last iteration only
+    # the surviving sample is the LAST (steadiest) iteration, and the
+    # contaminated mean (all 8, warmup included) is gone
+    raw = np.diff(np.concatenate(
+        [[0.0], np.asarray(out["t_done"])[0][:8]]))
+    assert tainted.iter_times[0] == raw[-1]
+
+
+def test_zero_completion_is_nan_dnf_not_inf():
+    """A cell that completes zero iterations inside the step budget is an
+    explicit DNF: mean_iter_time is NaN (never the old inf that poisoned
+    downstream ratio aggregation) and run_grid flags the rows."""
+    out, dt = _one_cell_out(n_iters=8, max_chunks=1)
+    res = sim_lib.summarize(out, n_iters=8, warmup=2, dt=dt, chunk=512,
+                            stride=8)
+    if res.n_done == 0:  # chunk budget too small to close one iteration
+        t = bench.mean_iter_time(res, lat=1e-6)
+        assert np.isnan(t) and not np.isinf(t)
+
+    sysp = systems.get_system("cresco8")
+    # a fine dt with a tiny step budget: no lane can close an iteration
+    rows = bench.run_grid(sysp, 8, "ring_allgather", "incast", [64 << 20],
+                          [cong.steady()], n_iters=8, warmup=2, dt=1e-6,
+                          max_steps=512, chunk=512)
+    assert all(r.dnf for r in rows)
+    assert all(np.isnan(r.ratio) for r in rows)
+    ok = bench.run_grid(sysp, 8, "ring_allgather", "incast", [1 << 20],
+                        [cong.steady()], n_iters=8, warmup=2)
+    assert not any(r.dnf for r in ok)
+    assert all(np.isfinite(r.ratio) for r in ok)
+
+
+def test_topology_cache_keys_on_builder_identity():
+    """_TOPO_CACHE used to key on (name, n) alone: a preset re-registered
+    under the same name with a different builder (or size) silently got
+    the stale topology. The key now fingerprints the builder."""
+    sysp = systems.get_system("cresco8")
+    base = bench.machine_topology(sysp)
+    assert bench.machine_topology(sysp) is base  # cache hit
+
+    modified = dataclasses.replace(
+        sysp, make_topology=lambda n: systems.get_system(
+            "lumi").make_topology(n))
+    alt = bench.machine_topology(modified)
+    assert alt is not base
+    assert (alt.n_links, alt.name) != (base.n_links, base.name)
+
+    bench.clear_topology_cache()
+    assert bench.machine_topology(sysp) is not base  # rebuilt
+
+
+def test_allocate_seed_scale_mixing():
+    """seed+n_nodes seeding made (seed=7, n=8) and (seed=8, n=7) the same
+    RNG draw; splitmix64 mixing must decouple them (and distinct scales
+    under one seed must not be near-copies)."""
+    sysp = systems.get_system("lumi")
+    a = bench.allocate(sysp, 8, seed=7)
+    b = bench.allocate(sysp, 7, seed=8)
+    assert not set(b) <= set(a)  # old scheme: b was a subset-like twin
+    # determinism and validity
+    np.testing.assert_array_equal(a, bench.allocate(sysp, 8, seed=7))
+    assert len(set(a)) == 8 and a.max() < sysp.machine_nodes
+    # neighboring scales draw unrelated (not prefix-nested) node sets
+    n16 = bench.allocate(sysp, 16, seed=7)
+    n17 = bench.allocate(sysp, 17, seed=7)
+    assert len(set(n16) & set(n17)) < 16

@@ -269,3 +269,31 @@ def test_gradient_refine_descends():
     for k, v in out["knobs"].items():
         lo, hi = SEARCH_BOUNDS[k]
         assert lo <= v <= hi, (k, v)
+
+
+def test_dnf_cells_excluded_from_scores():
+    """DNF cells (zero completed iterations, NaN ratio) must be counted
+    and excluded from the Pareto axes — never averaged in — and a
+    full-panel-DNF candidate can neither enter the frontier nor win."""
+    def run(cand, cell, ratio, dnf=False):
+        return search.CellRun(
+            cell=cell, candidate=cand,
+            t_uncongested_s=float("nan") if dnf else 1.0,
+            t_congested_s=float("nan") if dnf else 1.0 / ratio,
+            ratio=float("nan") if dnf else ratio,
+            victim_bytes=1e9, aggr_bytes=1e9, sim_time_s=1.0,
+            jain=1.0, dnf=dnf)
+
+    runs = [run("default", "a", 0.9), run("default", "b", 0.8),
+            run("good", "a", 0.95), run("good", "b", 0.85, dnf=True),
+            run("broken", "a", 0.0, dnf=True),
+            run("broken", "b", 0.0, dnf=True)]
+    scores = {s.candidate: s for s in score.aggregate(runs)}
+    assert scores["good"].n_dnf == 1
+    assert np.isclose(scores["good"].ratio_min, 0.95)  # DNF cell excluded
+    assert scores["broken"].n_dnf == 2
+    assert np.isnan(scores["broken"].ratio_min)
+
+    front = score.pareto_frontier(list(scores.values()))
+    assert "broken" not in {s.candidate for s in front}
+    assert score.pick_winner(list(scores.values())).candidate != "broken"
