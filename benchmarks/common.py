@@ -48,6 +48,31 @@ def cached_sweep(name: str, keys: List[str], points: Iterable[tuple],
 SCENARIO_KEYS = ["system", "n_nodes", "victim", "aggressor", "vector_bytes",
                  "profile"]
 
+# Cache-key columns per points-based (non-grid) scenario family — the
+# single source of truth shared by each family's driver and the
+# registry-completeness test, so CSV key drift stays caught (same role
+# expected_grid_keys plays for grid scenarios).
+POINT_KEYS: Dict[str, List[str]] = {
+    "fig1_breakdown": ["vector_bytes"],
+    "fig3_sawtooth": ["system", "vector_bytes"],
+    "fig4_nslb": ["mode", "vector_bytes"],
+    "collective_bench": ["size"],
+    "fleet_replay": ["system", "n_nodes", "n_seeds"],
+}
+
+
+def expected_point_keys(scenario) -> "tuple[List[str], List[tuple]]":
+    """(key columns, cache-key tuples in declaration order) for one
+    points-based scenario."""
+    keys = POINT_KEYS[scenario.name]
+    pts = [tuple(str(p) for p in pt) for pt in scenario.points]
+    for pt in pts:
+        if len(pt) != len(keys):
+            raise ValueError(
+                f"{scenario.name}: point {pt} does not match key "
+                f"columns {keys}")
+    return keys, pts
+
 
 def _grid_victim_label(grid) -> str:
     from repro.core import bench

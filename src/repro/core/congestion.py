@@ -84,6 +84,18 @@ def build_program_flowset(topo: Topology, jobs: Sequence[traffic.JobSpec],
                                    n_jobs=pad_to[1], n_phases=pad_to[2])
         if validate:
             traffic.check_program(prog)  # still exact on the valid prefix
+    return bind_program(topo, prog, routing_mode=routing_mode, k_max=k_max,
+                        seed=seed, policy_tables=policy_tables)
+
+
+def bind_program(topo: Topology, prog: traffic.TrafficProgram,
+                 routing_mode: str = "deterministic", k_max: int = 4,
+                 seed: int = 0, policy_tables: bool = False) -> FlowSet:
+    """Bind an already-compiled (possibly hand-assembled) TrafficProgram
+    to a topology — the binding half of :func:`build_program_flowset`,
+    exposed so callers that assemble programs outside the JobSpec
+    compiler (core/workload.py's stochastic short-flow rows) reuse the
+    exact same path/NIC/routing lowering."""
     src_dst = [(int(s), int(d)) for s, d in zip(prog.src, prog.dst)]
     paths_per_flow = [topo.paths(s, d) for s, d in src_dst]
     sink = len(topo.caps)

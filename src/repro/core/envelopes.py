@@ -30,6 +30,8 @@ from typing import Tuple
 
 import numpy as np
 
+from .fabric.routing import splitmix64_hilo
+
 ENV_OFF = 0
 ENV_STEADY = 1
 ENV_BURSTY = 2
@@ -57,10 +59,11 @@ def envelope_at(env, t):
     on_bursty = ((t % period) < p0).astype(jnp.float32)
     on_ramp = jnp.clip(t / slot_len, 0.0, 1.0)
     slot = jnp.floor(t / slot_len).astype(jnp.uint32)
-    h = (slot + seed.astype(jnp.uint32) * jnp.uint32(7919)) \
-        * jnp.uint32(2654435761)
-    u = ((h >> jnp.uint32(8)) & jnp.uint32(0x7FFFFF)).astype(jnp.float32) \
-        / jnp.float32(0x800000)
+    # splitmix64 of (seed:32 | slot:32): full-period counter PRNG, every
+    # output bit avalanches (replaces a weak LCG-style mix; DESIGN.md §15)
+    h_hi, _ = splitmix64_hilo(seed.astype(jnp.uint32), slot, xp=jnp)
+    u = ((h_hi >> jnp.uint32(8)) & jnp.uint32(0xFFFFFF)) \
+        .astype(jnp.float32) / jnp.float32(0x1000000)
     on_random = (u < p0 / period).astype(jnp.float32)
     val = jnp.select(
         [kind == ENV_STEADY, kind == ENV_BURSTY, kind == ENV_RAMP,
@@ -84,10 +87,10 @@ def envelope_np(env: np.ndarray, t: np.ndarray) -> np.ndarray:
     # floor, whose huge quotient would otherwise overflow the uint32 cast
     # (the selected value ignores those rows either way)
     slot = np.mod(np.floor(t / slot_len), 2.0 ** 32).astype(np.uint32)
-    h = (slot + seed.astype(np.uint32) * np.uint32(7919)) \
-        * np.uint32(2654435761)
-    u = ((h >> np.uint32(8)) & np.uint32(0x7FFFFF)).astype(np.float64) \
-        / float(0x800000)
+    seed_u = np.broadcast_to(seed.astype(np.uint32), slot.shape)
+    h_hi, _ = splitmix64_hilo(seed_u, slot)
+    u = ((h_hi >> np.uint32(8)) & np.uint32(0xFFFFFF)).astype(np.float64) \
+        / float(0x1000000)
     on_random = (u < p0 / period).astype(np.float64)
     val = np.select(
         [kind == ENV_STEADY, kind == ENV_BURSTY, kind == ENV_RAMP,

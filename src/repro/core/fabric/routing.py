@@ -73,6 +73,62 @@ def splitmix64(x) -> np.ndarray:
         return x ^ (x >> _U64(31))
 
 
+def splitmix64_hilo(hi, lo, xp=np):
+    """:func:`splitmix64` on (hi, lo) uint32 limb pairs — the SAME mixer,
+    emulated in 32-bit arithmetic so it runs inside a JAX trace (jnp has
+    no uint64 without the global x64 flag; pass ``xp=jax.numpy``). Pinned
+    equal to the uint64 reference in tests/test_fabric.py. All uint32
+    arithmetic wraps mod 2^32 by construction (that IS the algorithm).
+
+    Returns the mixed value as a (hi, lo) uint32 pair."""
+    u32 = lambda v: xp.asarray(v, xp.uint32)
+    mask16 = u32(0xFFFF)
+
+    def mul32(a, b32):
+        # full 64-bit product of two uint32 via 16-bit limbs -> (hi, lo)
+        a0, a1 = a & mask16, a >> u32(16)
+        b0, b1 = b32 & mask16, b32 >> u32(16)
+        ll = a0 * b0
+        mid = a0 * b1 + a1 * b0          # may wrap once: detect the carry
+        carry_mid = (mid < a0 * b1).astype(xp.uint32)
+        lo_ = ll + ((mid & mask16) << u32(16))
+        carry_lo = (lo_ < ll).astype(xp.uint32)
+        hi_ = a1 * b1 + (mid >> u32(16)) + (carry_mid << u32(16)) + carry_lo
+        return hi_, lo_
+
+    def add64(hi_, lo_, c_hi, c_lo):
+        s_lo = lo_ + u32(c_lo)
+        carry = (s_lo < lo_).astype(xp.uint32)
+        return hi_ + u32(c_hi) + carry, s_lo
+
+    def shr64_xor(hi_, lo_, k):
+        # x ^= x >> k for k in (27, 30, 31) — always 0 < k < 32
+        s_lo = (lo_ >> u32(k)) | (hi_ << u32(32 - k))
+        s_hi = hi_ >> u32(k)
+        return hi_ ^ s_hi, lo_ ^ s_lo
+
+    def mul64(hi_, lo_, m):
+        m_hi, m_lo = (m >> 32) & 0xFFFFFFFF, m & 0xFFFFFFFF
+        p_hi, p_lo = mul32(lo_, u32(m_lo))
+        return p_hi + lo_ * u32(m_hi) + hi_ * u32(m_lo), p_lo
+
+    hi, lo = u32(hi), u32(lo)
+    if xp is np:
+        ctx = np.errstate(over="ignore")  # wrap-around IS the algorithm
+    else:  # pragma: no cover - trivial null context for jnp
+        import contextlib
+        ctx = contextlib.nullcontext()
+    with ctx:
+        hi, lo = add64(hi, lo, _SPLITMIX_GAMMA >> 32,
+                       _SPLITMIX_GAMMA & 0xFFFFFFFF)
+        hi, lo = shr64_xor(hi, lo, 30)
+        hi, lo = mul64(hi, lo, _SPLITMIX_M1)
+        hi, lo = shr64_xor(hi, lo, 27)
+        hi, lo = mul64(hi, lo, _SPLITMIX_M2)
+        hi, lo = shr64_xor(hi, lo, 31)
+    return hi, lo
+
+
 def ecmp_hash(src, dst, salt) -> np.ndarray:
     """Deterministic ECMP hash of (src, dst) under ``salt`` — two
     splitmix64 rounds so src and dst both avalanche. Vectorized over

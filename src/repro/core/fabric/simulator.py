@@ -483,7 +483,7 @@ def stack_geometries(geoms: Sequence[FabricGeometry]) -> FabricGeometry:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["dt", "bytes_per_iter", "host_caps", "env", "policy",
-                      "flowlet_gap_s", "kind",
+                      "flowlet_gap_s", "flow_start", "fct_mask", "kind",
                       "qmax_bytes", "kmin", "kmax", "md", "rai_frac",
                       "cc_interval_s", "hol_factor", "hol_start",
                       "min_rate_frac", "follow_tau_s", "follow_gain",
@@ -502,8 +502,15 @@ class SimParams:
     # traced, so mixed-routing grids batch in one compile
     policy: jnp.ndarray  # () int32
     flowlet_gap_s: jnp.ndarray  # () seconds
-    # CC scalars (cc.CCParams lowered to data; kind selects the update rule)
-    kind: jnp.ndarray  # () int32
+    # stochastic-workload fields (core/workload.py): a flow is eligible
+    # only once sim time reaches its start (Poisson arrivals), and
+    # fct_mask selects which flows feed the FCT histogram (short flows).
+    # Scalar 0.0 defaults reproduce legacy behavior bit-for-bit.
+    flow_start: jnp.ndarray  # () or (F,) seconds
+    fct_mask: jnp.ndarray  # () or (F,) 0/1 weight
+    # CC scalars (cc.CCParams lowered to data; kind selects the update
+    # rule — scalar per cell, or (F,) for per-flow/tenant CC mixes)
+    kind: jnp.ndarray  # () or (F,) int32
     qmax_bytes: jnp.ndarray
     kmin: jnp.ndarray
     kmax: jnp.ndarray
@@ -523,13 +530,15 @@ class SimParams:
 def make_params(cc: CCParams, *, dt: float, bytes_per_iter: np.ndarray,
                 host_caps: np.ndarray, env: np.ndarray,
                 policy: int = POLICY_FIXED,
-                flowlet_gap_s: float = 200e-6) -> SimParams:
+                flowlet_gap_s: float = 200e-6,
+                flow_start=0.0, fct_mask=0.0) -> SimParams:
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     return SimParams(
         dt=f32(dt), bytes_per_iter=f32(bytes_per_iter),
         host_caps=f32(host_caps), env=f32(env),
         policy=jnp.asarray(policy, jnp.int32),
         flowlet_gap_s=f32(flowlet_gap_s),
+        flow_start=f32(flow_start), fct_mask=f32(fct_mask),
         kind=jnp.asarray(cc.kind, jnp.int32),
         qmax_bytes=f32(cc.qmax_bytes), kmin=f32(cc.kmin), kmax=f32(cc.kmax),
         md=f32(cc.md), rai_frac=f32(cc.rai_frac),
@@ -550,7 +559,31 @@ def stack_params(params: List[SimParams]) -> SimParams:
 # --------------------------------------------------------------------------
 
 
-def init_state(geom: FabricGeometry, p: SimParams):
+def init_state(geom: FabricGeometry, p: SimParams, metrics: bool = False):
+    """Initial scan carry. ``metrics=True`` adds the streaming-statistics
+    accumulators (core/metrics.py): O(bins + F + J) extra state,
+    independent of step count. ``_step_impl`` detects the extra keys and
+    emits the matching updates — the flag is structural (dict keys), so
+    it is static under jit without an extra argument."""
+    F, J = geom.n_flows, geom.n_jobs
+    state = _base_state(geom, p)
+    if metrics:
+        from repro.core import metrics as met
+        state.update({
+            # time each flow (re-)armed its current byte budget: short
+            # flows arm at their Poisson arrival, tenant flows at every
+            # phase entry — completion at t samples FCT = t - armed_t
+            "armed_t": jnp.zeros((F,), jnp.float32) + p.flow_start,
+            "h_qd": jnp.zeros((met.NBINS,), jnp.float32),
+            "h_fct": jnp.zeros((met.NBINS,), jnp.float32),
+            "wn": jnp.zeros((J,), jnp.float32),
+            "wmean": jnp.zeros((J,), jnp.float32),
+            "wm2": jnp.zeros((J,), jnp.float32),
+        })
+    return state
+
+
+def _base_state(geom: FabricGeometry, p: SimParams):
     F, J = geom.n_flows, geom.n_jobs
     return {
         "c": p.host_caps,
@@ -618,7 +651,17 @@ def _cc_update(p: SimParams, c, a, fmark, fstrength, can_dec):
     branches[KIND_IB] = ib
     branches[KIND_SLINGSHOT] = slingshot
     branches[KIND_AI_ECN] = ai_ecn
-    return jax.lax.switch(p.kind, branches, None)
+    if p.kind.ndim == 0:
+        # scalar kind per cell: lax.switch (vmap lowers it to a select)
+        return jax.lax.switch(p.kind, branches, None)
+    # per-flow kind (F,) — tenant CC mixes inside ONE cell (workload.py):
+    # evaluate every branch and select elementwise. jnp.select returns the
+    # chosen branch's exact value, so a uniform vector matches the scalar
+    # path bit-for-bit.
+    outs = [b(None) for b in branches]
+    preds = [p.kind == k for k in range(len(branches))]
+    return (jnp.select(preds, [c2 for c2, _ in outs], outs[0][0]),
+            jnp.select(preds, [d for _, d in outs], outs[0][1]))
 
 
 def step(geom: FabricGeometry, p: SimParams, state,
@@ -648,7 +691,9 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
     # (traffic.WILDCARD_PHASE — uniform ring schedules)
     in_phase = (geom.flow_phase == state["ph"][geom.flow_job]) \
         | (geom.flow_phase < 0)
-    alive = (state["rem"] > 0) & in_phase
+    # flow_start gates stochastic arrivals (workload.py); the scalar 0.0
+    # default keeps the predicate all-true — legacy runs are bit-identical
+    alive = (state["rem"] > 0) & in_phase & (state["t"] >= p.flow_start)
     active = (geom.is_victim | (env_t > 0)) & alive
     gate = jnp.where(geom.is_victim, 1.0, env_t) * alive
     inject = state["c"] * gate
@@ -765,6 +810,9 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
 
     # ---- progress + phase/program bookkeeping ----
     rem = state["rem"] - a * dt
+    # completion event: the flow was eligible and its budget crossed zero
+    # this very step (captured before `enter` re-arms rem below)
+    done_now = alive & (rem <= 0)
     t_new = state["t"] + dt
     # per-job barrier: a phase completes only when its SLOWEST member
     # flow has drained (straggler semantics, DESIGN.md §7) ...
@@ -810,24 +858,57 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
                  "fbytes": state["fbytes"] + a * dt,
                  "ph": ph_next, "gap": gap, "it": it, "t_done": t_done,
                  "qd_acc": state["qd_acc"] + mean_qdel * dt, "t": t_new}
+
+    if "h_qd" in state:  # streaming metrics carry (init_state(metrics=True))
+        from repro.core import metrics as met
+        # queue delay: every transmitting flow contributes one sample/step
+        w_qd = active.astype(jnp.float32)
+        h_qd = met.hist_add(state["h_qd"], qdel, w_qd, jnp)
+        # completion: an alive flow whose budget crossed zero this step
+        # (done is computed BEFORE the `enter` re-arm overwrote rem)
+        fct = t_new - state["armed_t"]
+        w_done = done_now.astype(jnp.float32)
+        h_fct = met.hist_add(state["h_fct"], fct,
+                             w_done * (p.fct_mask + jnp.zeros_like(fct)),
+                             jnp)
+        # per-tenant slowdown: FCT normalized by the flow's ideal
+        # (uncontended line-rate) drain time, merged Welford-style per job
+        ideal = p.bytes_per_iter / jnp.maximum(p.host_caps, 1.0)
+        slow = fct / jnp.maximum(ideal, 1e-9)
+        wn, wmean, wm2 = met.welford_update(
+            state["wn"], state["wmean"], state["wm2"], slow, w_done,
+            geom.flow_job, geom.n_jobs, jnp)
+        new_state.update({
+            "armed_t": jnp.where(enter, t_new, state["armed_t"]),
+            "h_qd": h_qd, "h_fct": h_fct,
+            "wn": wn, "wmean": wmean, "wm2": wm2})
+
     if with_aux:
         aux = {"inject": inject, "achieved": a, "arrival": arrival,
                "served_stage_max": served_stage_max, "caps_eff": caps_eff,
-               "active": active, "advance": advance, "wrap": wrap}
+               "active": active, "advance": advance, "wrap": wrap,
+               "qdel": qdel, "done": done_now}
         return new_state, vict_goodput, aux
     return new_state, vict_goodput
 
 
 def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
               chunk: int, max_chunks: int, stride: int,
-              backend: str = "ref"):
+              backend: str = "ref", metrics: bool = False,
+              with_trace: bool = True):
     """Run one cell to ``n_iters`` victim iterations (or the step budget),
     chunked so the early exit happens at chunk granularity. Pure and
-    vmap-able: under vmap the while_loop runs until every cell finishes."""
+    vmap-able: under vmap the while_loop runs until every cell finishes.
+
+    ``metrics=True`` threads the streaming accumulators through the scan
+    and returns them; ``with_trace=False`` drops the strided goodput
+    buffer — the replay path's peak memory is then O(F + bins) per cell,
+    independent of the step budget (no O(T) allocation at all)."""
     assert chunk % stride == 0, (chunk, stride)
     trace_chunk = chunk // stride
-    state = init_state(geom, p)
-    buf = jnp.zeros((max_chunks * trace_chunk,), jnp.float32)
+    state = init_state(geom, p, metrics=metrics)
+    buf = jnp.zeros((max_chunks * trace_chunk if with_trace else 1,),
+                    jnp.float32)
 
     def cond(carry):
         state, _, k = carry
@@ -841,16 +922,21 @@ def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
             lambda s, _: _step_impl(geom, p, s, with_aux=False,
                                     backend=backend),
             state, None, length=chunk)
-        buf = jax.lax.dynamic_update_slice(buf, gp[::stride],
-                                           (k * trace_chunk,))
+        if with_trace:
+            buf = jax.lax.dynamic_update_slice(buf, gp[::stride],
+                                               (k * trace_chunk,))
         return state, buf, k + 1
 
     state, buf, k = jax.lax.while_loop(
         cond, body, (state, buf, jnp.zeros((), jnp.int32)))
-    return {"t_done": state["t_done"], "it": state["it"],
-            "qd_acc": state["qd_acc"], "t": state["t"],
-            "fbytes": state["fbytes"],
-            "trace": buf, "chunks": k}
+    out = {"t_done": state["t_done"], "it": state["it"],
+           "qd_acc": state["qd_acc"], "t": state["t"],
+           "fbytes": state["fbytes"],
+           "trace": buf, "chunks": k}
+    if metrics:
+        out.update({k2: state[k2]
+                    for k2 in ("h_qd", "h_fct", "wn", "wmean", "wm2")})
+    return out
 
 
 # The public entries resolve the step-core backend EAGERLY (a Python
@@ -861,54 +947,60 @@ def _run_cell(geom: FabricGeometry, p: SimParams, n_iters,
 
 
 @partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride",
-                                   "backend"))
-def _run_cell_jit(geom, p, n_iters, *, chunk, max_chunks, stride, backend):
+                                   "backend", "metrics", "with_trace"))
+def _run_cell_jit(geom, p, n_iters, *, chunk, max_chunks, stride, backend,
+                  metrics=False, with_trace=True):
     TRACE_COUNTS["run_cell"] += 1
-    return _run_cell(geom, p, n_iters, chunk, max_chunks, stride, backend)
+    return _run_cell(geom, p, n_iters, chunk, max_chunks, stride, backend,
+                     metrics, with_trace)
 
 
 def run_cell(geom: FabricGeometry, p: SimParams, n_iters,
              *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8,
-             backend: Optional[str] = None):
+             backend: Optional[str] = None, metrics: bool = False,
+             with_trace: bool = True):
     ensure_compile_cache()
     return _run_cell_jit(geom, p, n_iters, chunk=chunk,
                          max_chunks=max_chunks, stride=stride,
-                         backend=resolve_step_backend(backend))
+                         backend=resolve_step_backend(backend),
+                         metrics=metrics, with_trace=with_trace)
 
 
 @partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride",
-                                   "backend"))
+                                   "backend", "metrics", "with_trace"))
 def _run_cells_jit(geom, params, n_iters, *, chunk, max_chunks, stride,
-                   backend):
+                   backend, metrics=False, with_trace=True):
     TRACE_COUNTS["run_cells"] += 1
     return jax.vmap(
         lambda pp: _run_cell(geom, pp, n_iters, chunk, max_chunks, stride,
-                             backend)
+                             backend, metrics, with_trace)
     )(params)
 
 
 def run_cells(geom: FabricGeometry, params: SimParams, n_iters,
               *, chunk: int = 2048, max_chunks: int = 98, stride: int = 8,
-              backend: Optional[str] = None):
+              backend: Optional[str] = None, metrics: bool = False,
+              with_trace: bool = True):
     """Batched engine: ``params`` has a leading cell axis on every leaf.
     One compile serves the whole grid; all cells advance in lockstep until
     the slowest finishes."""
     ensure_compile_cache()
     return _run_cells_jit(geom, params, n_iters, chunk=chunk,
                           max_chunks=max_chunks, stride=stride,
-                          backend=resolve_step_backend(backend))
+                          backend=resolve_step_backend(backend),
+                          metrics=metrics, with_trace=with_trace)
 
 
 @partial(jax.jit, static_argnames=("chunk", "max_chunks", "stride",
-                                   "backend"))
+                                   "backend", "metrics", "with_trace"))
 def _run_cells_hetero_jit(geoms, params, n_iters, *, chunk, max_chunks,
-                          stride, backend):
+                          stride, backend, metrics=False, with_trace=True):
     TRACE_COUNTS["run_cells_hetero"] += 1
 
     def one_geom(g, ps):
         return jax.vmap(
             lambda pp: _run_cell(g, pp, n_iters, chunk, max_chunks, stride,
-                                 backend)
+                                 backend, metrics, with_trace)
         )(ps)
 
     return jax.vmap(one_geom)(geoms, params)
@@ -918,7 +1010,8 @@ def run_cells_hetero(geoms: FabricGeometry, params: SimParams, n_iters,
                      *, chunk: int = 2048, max_chunks: int = 98,
                      stride: int = 8, backend: Optional[str] = None,
                      mesh=None, shard_axis: str = "cell",
-                     donate: bool = False):
+                     donate: bool = False, metrics: bool = False,
+                     with_trace: bool = True):
     """Scale-batched engine: ``geoms`` is a stack of bucket-padded
     geometries (leading axis = topology cell) and ``params`` carries TWO
     leading axes — (topology cell, sub-cell) — so a whole
@@ -942,7 +1035,8 @@ def run_cells_hetero(geoms: FabricGeometry, params: SimParams, n_iters,
     if mesh is None:
         return _run_cells_hetero_jit(geoms, params, n_iters, chunk=chunk,
                                      max_chunks=max_chunks, stride=stride,
-                                     backend=backend)
+                                     backend=backend, metrics=metrics,
+                                     with_trace=with_trace)
     if shard_axis not in ("cell", "lane"):
         raise ValueError(f"shard_axis must be 'cell' or 'lane', "
                          f"got {shard_axis!r}")
@@ -956,7 +1050,7 @@ def run_cells_hetero(geoms: FabricGeometry, params: SimParams, n_iters,
         n_real = _leading_dim(params, axis=1)
         params = pad_batch(params, n_dev, axis=1)
     fn = _sharded_hetero_jit(mesh, axis, shard_axis, chunk, max_chunks,
-                             stride, backend, donate)
+                             stride, backend, donate, metrics, with_trace)
     out = fn(geoms, params, n_iters)
     take = 0 if shard_axis == "cell" else 1
     return {k: jax.lax.slice_in_dim(v, 0, n_real, axis=take)
@@ -993,9 +1087,10 @@ _SHARDED_JITS: dict = {}
 
 def _sharded_hetero_jit(mesh, axis: str, shard_axis: str, chunk: int,
                         max_chunks: int, stride: int, backend: str,
-                        donate: bool):
+                        donate: bool, metrics: bool = False,
+                        with_trace: bool = True):
     key = (mesh, axis, shard_axis, chunk, max_chunks, stride, backend,
-           donate)
+           donate, metrics, with_trace)
     fn = _SHARDED_JITS.get(key)
     if fn is not None:
         return fn
@@ -1013,7 +1108,8 @@ def _sharded_hetero_jit(mesh, axis: str, shard_axis: str, chunk: int,
         def shard(g, ps, ni):
             return jax.vmap(lambda gg, row: jax.vmap(
                 lambda pp: _run_cell(gg, pp, ni, chunk, max_chunks,
-                                     stride, backend))(row))(g, ps)
+                                     stride, backend, metrics,
+                                     with_trace))(row))(g, ps)
 
         return jax.shard_map(shard, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)(

@@ -1,0 +1,127 @@
+"""Streaming percentile metrics for fleet-scale replay (DESIGN.md §15).
+
+A fleet replay runs thousands of seeds x 10^5 steps; materializing per-step
+traces is O(T x B x F) — hundreds of GB — so distribution metrics are
+folded into the ``lax.scan`` carry instead:
+
+* **Fixed-bin log-spaced histograms** for queue delay and flow completion
+  time (FCT). :data:`NBINS` bins spanning :data:`DECADES` decades from
+  ``10**LOG10_MIN`` seconds at :data:`BINS_PER_DECADE` bins/decade.
+  Memory is O(B x NBINS), independent of step count; any quantile read
+  from the histogram is exact up to one bin width (a factor of
+  ``10**(1/BINS_PER_DECADE)`` ~= 1.33x). Values below/above the span
+  clamp into the first/last bin.
+* **Welford accumulators** (count / mean / M2) per tenant (job) over
+  per-completion slowdown samples, merged each step with Chan's parallel
+  update — exact in exact arithmetic, fp32-stable in practice.
+
+Exactness contract (pinned by tests/test_workload.py): binning the same
+samples post-hoc with :func:`np_hist` reproduces the streaming histogram
+*exactly* (same counts, bin by bin), and the streaming Welford mean /
+variance match the post-hoc mean / variance to fp tolerance. The
+streaming path loses only within-bin resolution, never samples.
+
+Everything traced lives here as jnp-polymorphic helpers (pass ``xp``);
+host-side extraction (:func:`percentiles`, :func:`hist_cdf`,
+:func:`welford_finalize`) is plain NumPy.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+NBINS = 64
+BINS_PER_DECADE = 8
+DECADES = NBINS // BINS_PER_DECADE  # 8 decades
+LOG10_MIN = -7.0  # first bin edge: 100 ns — below any queue delay of note
+_FLOOR = 1e-30  # log argument floor; maps 0.0 into the first bin
+
+# default quantiles reported by the replay driver
+QUANTILES = (0.50, 0.90, 0.99, 0.999)
+
+
+def bin_edges() -> np.ndarray:
+    """(NBINS + 1,) bin edges in seconds, log-spaced."""
+    return 10.0 ** (LOG10_MIN + np.arange(NBINS + 1) / BINS_PER_DECADE)
+
+
+def bin_index(x, xp=np):
+    """Bin id for sample(s) ``x`` (seconds) — identical formula for the
+    traced (xp=jnp) and post-hoc (xp=np) paths, so streaming and
+    materialized histograms agree bin-for-bin."""
+    lg = xp.log10(xp.maximum(xp.asarray(x, xp.float32), _FLOOR))
+    idx = xp.floor((lg - LOG10_MIN) * BINS_PER_DECADE)
+    return xp.clip(idx, 0, NBINS - 1).astype(xp.int32)
+
+
+def hist_add(h, x, w, xp):
+    """Scatter weighted samples into histogram ``h`` (shape (NBINS,))."""
+    return h.at[bin_index(x, xp)].add(xp.asarray(w, xp.float32))
+
+
+def np_hist(x, w=None) -> np.ndarray:
+    """Post-hoc reference histogram over materialized samples — the
+    exactness oracle for the streaming path."""
+    x = np.asarray(x, np.float32).ravel()
+    w = np.ones_like(x) if w is None else np.asarray(w, np.float32).ravel()
+    h = np.zeros((NBINS,), np.float64)
+    np.add.at(h, np.asarray(bin_index(x, np)).ravel(), w)
+    return h.astype(np.float32)
+
+
+def welford_update(wn, wmean, wm2, sample, weight, seg_ids, n_groups, xp):
+    """Merge one step's per-group sample batch into Welford accumulators
+    (Chan's parallel update). ``sample``/``weight`` are per-element;
+    ``seg_ids`` groups them (e.g. flow -> job). A group with zero batch
+    weight is left exactly unchanged (frac == 0)."""
+    w = xp.asarray(weight, xp.float32)
+    zeros = xp.zeros((n_groups,), xp.float32)
+    nb = zeros.at[seg_ids].add(w)
+    sum_b = zeros.at[seg_ids].add(w * sample)
+    mean_b = sum_b / xp.maximum(nb, 1.0)
+    m2_b = zeros.at[seg_ids].add(w * (sample - mean_b[seg_ids]) ** 2)
+    n_new = wn + nb
+    delta = mean_b - wmean
+    frac = nb / xp.maximum(n_new, 1.0)
+    return (n_new,
+            wmean + delta * frac,
+            wm2 + m2_b + delta * delta * wn * frac)
+
+
+def welford_finalize(wn, wmean, wm2):
+    """(count, mean, std) from accumulators; NaN mean/std where count==0."""
+    wn = np.asarray(wn, np.float64)
+    empty = wn <= 0
+    mean = np.where(empty, np.nan, np.asarray(wmean, np.float64))
+    var = np.asarray(wm2, np.float64) / np.maximum(wn, 1.0)
+    std = np.where(empty, np.nan, np.sqrt(np.maximum(var, 0.0)))
+    return wn, mean, std
+
+
+def percentiles(h: np.ndarray, qs: Sequence[float] = QUANTILES) -> dict:
+    """Quantiles read from a histogram: the geometric midpoint of the
+    first bin whose cumulative weight reaches ``q`` of the total. Exact
+    up to one bin width. Empty histogram -> NaN. Batched histograms
+    (.., NBINS) return arrays over the leading axes."""
+    h = np.asarray(h, np.float64)
+    edges = bin_edges()
+    mids = np.sqrt(edges[:-1] * edges[1:])
+    cdf = np.cumsum(h, axis=-1)
+    total = cdf[..., -1:]
+    out = {}
+    for q in qs:
+        # first bin with cdf >= q * total (argmax of the boolean mask)
+        hit = cdf >= np.maximum(q * total, _FLOOR)
+        idx = np.argmax(hit, axis=-1)
+        val = mids[idx]
+        out[q] = np.where(total[..., 0] > 0, val, np.nan)
+    return out
+
+
+def hist_cdf(h: np.ndarray):
+    """(upper_edges, cdf in [0,1]) for plotting FCT / delay CDFs."""
+    h = np.asarray(h, np.float64)
+    cdf = np.cumsum(h, axis=-1)
+    total = np.maximum(cdf[..., -1:], _FLOOR)
+    return bin_edges()[1:], cdf / total

@@ -270,6 +270,22 @@ def fig3_sawtooth(quick: bool = False) -> Scenario:
 
 
 @register
+def fleet_replay(quick: bool = False) -> Scenario:
+    """Stochastic fleet replay (benchmarks/fleet_replay.py): each point is
+    a (system, n_nodes, n_seeds) batched seed sweep through
+    core/workload.py with streaming percentile metrics in the scan."""
+    n_seeds = 8 if quick else 256
+    cells = (("cresco8", 16), ("lumi", 16)) if quick \
+        else (("cresco8", 32), ("lumi", 32))
+    return Scenario(
+        "fleet_replay",
+        "Fleet-scale stochastic workload replay: Poisson short flows + "
+        "training tenants with per-tenant CC mixes, p50/p99/p99.9 queue "
+        "delay and FCT from streaming in-scan histograms.",
+        grids=(), points=tuple((s, n, n_seeds) for s, n in cells))
+
+
+@register
 def fig4_nslb(quick: bool = False) -> Scenario:
     sizes = (4 * MiB, 16 * MiB) if quick else \
         (MiB, 4 * MiB, 16 * MiB, 64 * MiB)

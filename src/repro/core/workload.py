@@ -1,0 +1,406 @@
+"""Seeded stochastic fleet workloads (ROADMAP item 3, DESIGN.md §15).
+
+The paper's motivation is congestion driven by "heterogeneous traffic
+patterns resulting from diverse workload mixes", and Jha et al.
+(PAPERS.md, arXiv:1907.05312) characterize the congestion that matters in
+production from *fleet telemetry* — distributions over thousands of
+arrival patterns, not single hand-scripted job sets. This module lowers a
+stochastic workload model into the batched engine so thousands of seeds
+replay as one ``jit(vmap)``:
+
+* **Template (host side, per workload config).** The *structure* of the
+  workload is fixed: long-lived training tenants (phased ring / AlltoAll
+  programs with compute gaps, via the normal JobSpec compiler) plus
+  :attr:`WorkloadSpec.short_slots` short-flow rows appended to the
+  program — each slot a (src, dst) pair drawn once from the allocation
+  with the pinned splitmix64 template stream. Paths, NIC caps and the
+  geometry are bound once (congestion.bind_program) and shared by every
+  seed: topology binding cannot be traced, so everything a seed varies
+  must be *traced data*, not structure.
+
+* **Per-seed lowering (inside the trace).** :func:`lower_seed` draws,
+  through ``jax.random`` from the seed alone: which slots fire this seed
+  (Bernoulli thinning at rate ``arrivals_mean / short_slots`` — the
+  binomial construction of a Poisson arrival count), their arrival times
+  (uniform over the horizon — the order statistics of a Poisson process),
+  their sizes (lognormal), a per-tenant CC kind from :attr:`cc_mix`, and
+  a tenant start stagger. All of it lands in existing traced SimParams
+  leaves (``bytes_per_iter``, ``flow_start``, ``fct_mask``, per-flow
+  ``kind``), so a 1024-seed batch is ``vmap(lower_seed)`` feeding the
+  stock engine — one compile per geometry bucket, zero host round-trips.
+
+An idle slot carries 0 bytes -> never ``alive`` -> provably inert, the
+same contract as geometry pad flows. The shorts job's phase gap is
+:data:`SHORT_GAP_NEVER`, so drained slots never re-arm (one-shot flows,
+unlike the tenants' repeating phase programs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bench, congestion as cong, traffic
+from repro.core.fabric import cc as cc_lib
+from repro.core.fabric import simulator as sim
+from repro.core.fabric.routing import splitmix64
+from repro.core.fabric import systems
+
+# a phase gap no replay horizon ever reaches: short-flow slots are
+# one-shot (their job's single phase never advances, so `enter` never
+# re-arms a drained slot)
+SHORT_GAP_NEVER = 1e9
+
+_CC_KINDS = {"dcqcn": cc_lib.KIND_DCQCN, "ib": cc_lib.KIND_IB,
+             "slingshot": cc_lib.KIND_SLINGSHOT,
+             "ai_ecn": cc_lib.KIND_AI_ECN}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One stochastic fleet-workload configuration (the template knobs;
+    everything a *seed* varies is drawn inside the trace)."""
+
+    system: str = "lumi"
+    n_nodes: int = 32
+    # long-lived training tenants: one phased job per collective listed
+    tenant_collectives: Tuple[str, ...] = ("ring_allreduce", "alltoall")
+    tenant_bytes: float = float(1 << 20)
+    tenant_gap_s: float = 100e-6  # compute gap between schedule phases
+    tenant_stagger_s: float = 500e-6  # per-seed uniform start offset
+    # Poisson short flows: S padded slots, each active with probability
+    # arrivals_mean / short_slots (binomial thinning ~ Poisson count)
+    short_slots: int = 64
+    arrivals_mean: float = 24.0
+    horizon_s: float = 0.02  # arrival window (simulated seconds)
+    short_bytes_median: float = float(256 << 10)
+    short_sigma: float = 1.2  # lognormal shape (natural-log std)
+    # per-tenant CC mix: (name, probability) — each job draws its kind
+    cc_mix: Tuple[Tuple[str, float], ...] = (
+        ("dcqcn", 0.5), ("ib", 0.25), ("slingshot", 0.25))
+    template_seed: int = 0
+
+    def __post_init__(self):
+        if self.short_slots < 1:
+            raise ValueError("short_slots must be >= 1")
+        if not self.cc_mix:
+            raise ValueError("cc_mix must not be empty")
+        for name, _ in self.cc_mix:
+            if name not in _CC_KINDS:
+                raise KeyError(f"unknown CC kind {name!r}; expected one "
+                               f"of {sorted(_CC_KINDS)}")
+
+
+@dataclasses.dataclass
+class ReplayTemplate:
+    """Host-built, seed-independent replay structure: the bound geometry
+    plus the per-flow base tables :func:`lower_seed` overlays."""
+
+    spec: WorkloadSpec
+    geom: sim.FabricGeometry
+    dt: float
+    policy: int
+    cc: cc_lib.CCParams  # scalar CC knobs (kind is drawn per seed)
+    env: np.ndarray  # envelope components (steady — tenants self-gate)
+    base_bytes: np.ndarray  # (F,) tenant bytes; short/pad rows 0
+    host_caps: np.ndarray  # (F,)
+    fct_mask: np.ndarray  # (F,) 1.0 on short rows
+    flow_job: np.ndarray  # (F,) incl. pad rows
+    job_is_tenant: np.ndarray  # (J,)
+    short_idx: np.ndarray  # (S,) row indices of the short slots
+    n_jobs: int  # incl. pad jobs (grows under pad_template)
+    # real jobs (tenants + shorts) — job-level draws use THIS count, so
+    # bucket padding cannot perturb a seed's draws (padding inertness)
+    n_real_jobs: int
+    job_names: Tuple[str, ...]
+    # mix lowering: kind id per mix entry + log-probabilities
+    mix_kinds: np.ndarray  # (M,) int32
+    mix_logp: np.ndarray  # (M,) float32
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.geom.n_flows)
+
+
+def _short_endpoints(nodes: np.ndarray, n_slots: int,
+                     template_seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(src, dst) per slot, distinct by construction, drawn from the
+    pinned splitmix64 template stream (reproducible across platforms)."""
+    n = len(nodes)
+    slot = np.arange(n_slots, dtype=np.uint64)
+    h1 = splitmix64(slot ^ (np.uint64(template_seed) << np.uint64(32)))
+    h2 = splitmix64(h1)
+    si = (h1 % np.uint64(n)).astype(np.int64)
+    off = 1 + (h2 % np.uint64(max(n - 1, 1))).astype(np.int64)
+    return nodes[si], nodes[(si + off) % n]
+
+
+def build_template(spec: WorkloadSpec,
+                   pad_to: Optional[Tuple[int, int, int]] = None
+                   ) -> ReplayTemplate:
+    """Compile the tenant programs, append the short-flow slots, bind to
+    the system topology. ``pad_to=(n_flows, n_jobs, n_phases)`` pads the
+    program to bucket dims (inert rows, traffic.pad_program)."""
+    sysp = systems.get_system(spec.system)
+    topo = bench.machine_topology(sysp, spec.n_nodes)
+    nodes = bench.allocate(sysp, spec.n_nodes, seed=7 + spec.template_seed)
+    jobs = [traffic.JobSpec(f"tenant{i}_{coll}", coll,
+                            vector_bytes=spec.tenant_bytes, phased=True,
+                            gap_s=spec.tenant_gap_s, sweep_bytes=False)
+            for i, coll in enumerate(spec.tenant_collectives)]
+    jobs = traffic.split_nodes(nodes, jobs)
+    prog = traffic.compile_programs(jobs, validate=True)
+
+    # ---- append the short-flow job (hand-assembled rows; the JobSpec
+    # compiler only knows collectives, and check_program skips jobs
+    # without a node assignment) ----
+    S = spec.short_slots
+    s_src, s_dst = _short_endpoints(np.asarray(nodes), S,
+                                    spec.template_seed)
+    jt = prog.n_jobs  # shorts job id
+    p_max = int(prog.phase_gap.shape[1])
+    phase_gap = np.zeros((jt + 1, p_max), np.float32)
+    phase_gap[:jt] = prog.phase_gap
+    phase_gap[jt, 0] = SHORT_GAP_NEVER
+    prog = traffic.TrafficProgram(
+        jobs=prog.jobs + (traffic.JobSpec("shorts", "shortflows",
+                                          sweep_bytes=False),),
+        src=np.concatenate([prog.src, s_src.astype(np.int32)]),
+        dst=np.concatenate([prog.dst, s_dst.astype(np.int32)]),
+        bytes_per_phase=np.concatenate(
+            [prog.bytes_per_phase,
+             np.full((S,), spec.short_bytes_median)]),
+        flow_job=np.concatenate(
+            [prog.flow_job, np.full((S,), jt, np.int32)]),
+        flow_phase=np.concatenate([prog.flow_phase,
+                                   np.zeros((S,), np.int32)]),
+        n_phases=np.concatenate([prog.n_phases, [1]]).astype(np.int32),
+        phase_gap=phase_gap,
+        env_gated=np.concatenate([prog.env_gated, [False]]),
+        sweep_mask=np.concatenate([prog.sweep_mask,
+                                   np.zeros((S,), bool)]))
+    traffic.check_program(prog)  # tenants still conserve wire bytes
+    if pad_to is not None:
+        prog = traffic.pad_program(prog, n_flows=pad_to[0],
+                                   n_jobs=pad_to[1], n_phases=pad_to[2])
+
+    flows = cong.bind_program(topo, prog,
+                              routing_mode=sysp.static_routing,
+                              k_max=sysp.k_max, seed=spec.template_seed)
+    geom = sim.make_geometry(topo, flows)
+
+    n0 = len(jobs[0].nodes)
+    dt = bench.choose_dt(topo, n0, spec.tenant_bytes,
+                         cong.latency_model(spec.tenant_collectives[0], n0),
+                         int(prog.n_phases.max()))
+
+    fjob = np.asarray(prog.flow_job)
+    short_mask = fjob == jt
+    base_bytes = np.where(short_mask, 0.0,
+                          prog.bytes_per_phase).astype(np.float32)
+    n_jobs = len(prog.n_phases)
+    job_is_tenant = np.zeros((n_jobs,), np.float32)
+    job_is_tenant[:jt] = 1.0
+    names = tuple(j.name for j in prog.jobs) + tuple(
+        traffic.PAD_JOB_NAME for _ in range(n_jobs - len(prog.jobs)))
+    mix_names = [m for m, _ in spec.cc_mix]
+    mix_p = np.asarray([p for _, p in spec.cc_mix], np.float64)
+    mix_p = mix_p / mix_p.sum()
+    return ReplayTemplate(
+        spec=spec, geom=geom, dt=float(dt),
+        policy=int(systems.default_policy(sysp)),
+        cc=sysp.cc, env=cong.steady().params(),
+        base_bytes=base_bytes,
+        host_caps=np.asarray(flows.host_caps, np.float32),
+        fct_mask=short_mask.astype(np.float32),
+        flow_job=fjob.astype(np.int32),
+        job_is_tenant=job_is_tenant,
+        short_idx=np.nonzero(short_mask)[0].astype(np.int32),
+        n_jobs=n_jobs, n_real_jobs=jt + 1, job_names=names,
+        mix_kinds=np.asarray([_CC_KINDS[m] for m in mix_names], np.int32),
+        mix_logp=np.log(mix_p).astype(np.float32))
+
+
+def pad_template(t: ReplayTemplate,
+                 dims: sim.GeometryDims) -> ReplayTemplate:
+    """Pad a template to bucket dims so heterogeneous systems stack
+    (mirrors bench.bucket_stack + GridCase.cell_params padding)."""
+    F, J = dims.n_flows, dims.n_jobs
+    pad = traffic.pad_rows
+    return dataclasses.replace(
+        t, geom=sim.pad_geometry(t.geom, dims),
+        base_bytes=pad(t.base_bytes, F, 0.0),
+        host_caps=pad(t.host_caps, F, 1.0),
+        fct_mask=pad(t.fct_mask, F, 0.0),
+        flow_job=pad(t.flow_job, F, J - 1),
+        job_is_tenant=pad(t.job_is_tenant, J, 0.0),
+        n_jobs=J,
+        job_names=t.job_names + tuple(
+            traffic.PAD_JOB_NAME for _ in range(J - len(t.job_names))))
+
+
+# --------------------------------------------------------------------------
+# Per-seed lowering (traced: vmap over seeds shares one compile)
+# --------------------------------------------------------------------------
+
+
+def lower_seed(t: ReplayTemplate, seed) -> sim.SimParams:
+    """One seed -> SimParams, entirely inside the trace. Vmappable: the
+    1024-seed batch is ``vmap(lower_seed)`` and lowers identically to the
+    single-seed call (batch invariance, tests/test_workload.py)."""
+    import jax
+    import jax.numpy as jnp
+
+    spec = t.spec
+    key = jax.random.PRNGKey(seed)
+    k_act, k_size, k_time, k_cc, k_st = jax.random.split(key, 5)
+    S = spec.short_slots
+    # Poisson arrivals via slot thinning + order-statistics times
+    p_on = min(spec.arrivals_mean / S, 1.0)
+    active = jax.random.bernoulli(k_act, p_on, (S,))
+    sizes = spec.short_bytes_median * jnp.exp(
+        spec.short_sigma * jax.random.normal(k_size, (S,)))
+    starts = jax.random.uniform(k_time, (S,), minval=0.0,
+                                maxval=spec.horizon_s)
+    short_bytes = jnp.where(active, sizes, 0.0).astype(jnp.float32)
+    # per-job CC kind from the mix (shorts draw a fleet-mix kind like any
+    # tenant). Draw shapes use the REAL job count so the same seed draws
+    # the same values no matter how far the template was bucket-padded;
+    # pad jobs get a constant kind / zero stagger (inert either way).
+    nr, n_pad = t.n_real_jobs, t.n_jobs - t.n_real_jobs
+    mix_idx = jax.random.categorical(
+        k_cc, jnp.asarray(t.mix_logp), shape=(nr,))
+    job_kind = jnp.concatenate(
+        [jnp.asarray(t.mix_kinds)[mix_idx],
+         jnp.full((n_pad,), t.mix_kinds[0], jnp.int32)])
+    flow_kind = job_kind[jnp.asarray(t.flow_job)]
+    # tenant start stagger (phase alignment varies per seed)
+    job_start = jax.random.uniform(k_st, (nr,), minval=0.0,
+                                   maxval=max(spec.tenant_stagger_s, 1e-12))
+    job_start = jnp.concatenate([job_start, jnp.zeros((n_pad,))])
+    job_start = job_start * jnp.asarray(t.job_is_tenant)
+    sidx = jnp.asarray(t.short_idx)
+    flow_start = jnp.asarray(t.job_is_tenant)[jnp.asarray(t.flow_job)] \
+        * job_start[jnp.asarray(t.flow_job)]
+    flow_start = flow_start.at[sidx].set(starts)
+    bpi = jnp.asarray(t.base_bytes).at[sidx].set(short_bytes)
+    params = sim.make_params(
+        t.cc, dt=t.dt, bytes_per_iter=bpi, host_caps=t.host_caps,
+        env=t.env, policy=t.policy, flow_start=flow_start,
+        fct_mask=t.fct_mask)
+    return dataclasses.replace(params, kind=flow_kind.astype(jnp.int32))
+
+
+def lower_seeds(t: ReplayTemplate, seeds) -> sim.SimParams:
+    """Batched lowering: SimParams with a leading seed axis."""
+    import jax
+    import jax.numpy as jnp
+
+    seeds = jnp.asarray(np.asarray(seeds), jnp.uint32)
+    return jax.vmap(lambda s: lower_seed(t, s))(seeds)
+
+
+def replay_budget(t: ReplayTemplate, chunk: int = 2048,
+                  tail_frac: float = 0.5) -> int:
+    """Chunk budget covering the arrival horizon plus a drain tail (late
+    arrivals need time to complete)."""
+    steps = (1.0 + tail_frac) * t.spec.horizon_s / t.dt
+    return max(int(np.ceil(steps / chunk)), 1)
+
+
+def run_replay(templates: Sequence[ReplayTemplate], seeds, *,
+               chunk: int = 2048, metrics: bool = True,
+               with_trace: bool = False, launcher=None, mesh=None):
+    """Replay ``seeds`` over one or more templates in ONE batched hetero
+    call: geometries bucket-pad and stack (bench.bucket_stack policy),
+    params get a (template, seed) leading pair, streaming metrics ride
+    the scan. Returns ``(out, padded_templates)``."""
+    import jax.numpy as jnp
+
+    dims, geoms = bench.bucket_stack([t.geom for t in templates])
+    padded = [pad_template(t, dims) for t in templates]
+    params = sim.stack_params([lower_seeds(t, seeds) for t in padded])
+    max_chunks = max(replay_budget(t, chunk) for t in padded)
+    n_iters = jnp.asarray(sim.TDONE_SLOTS, jnp.int32)  # budget-bounded
+    kw = dict(chunk=chunk, max_chunks=max_chunks, stride=8,
+              metrics=metrics, with_trace=with_trace)
+    if launcher is not None:
+        out = launcher(geoms, params, n_iters, **kw)
+    else:
+        out = sim.run_cells_hetero(geoms, params, n_iters, mesh=mesh, **kw)
+    return out, padded
+
+
+# --------------------------------------------------------------------------
+# Host-side summary
+# --------------------------------------------------------------------------
+
+
+def tenant_bytes(out_fbytes: np.ndarray, t: ReplayTemplate) -> np.ndarray:
+    """Per-job delivered bytes (..., J) from per-flow accumulators."""
+    fb = np.asarray(out_fbytes)
+    J = t.n_jobs
+    res = np.zeros(fb.shape[:-1] + (J,), np.float64)
+    for j in range(J):
+        m = t.flow_job == j
+        if m.any():
+            res[..., j] = fb[..., m].sum(-1)
+    return res
+
+
+def summarize_replay(out, padded: Sequence[ReplayTemplate],
+                     qs=None) -> list:
+    """One summary dict per template: aggregate + per-seed percentiles,
+    per-tenant slowdown stats and delivered bytes. Host-side NumPy over
+    the O(B x bins) outputs only."""
+    from repro.core import metrics as met
+
+    qs = qs or met.QUANTILES
+    res = []
+    for k, t in enumerate(padded):
+        h_qd = np.asarray(out["h_qd"])[k]  # (B, NBINS)
+        h_fct = np.asarray(out["h_fct"])[k]
+        agg_qd = met.percentiles(h_qd.sum(0), qs)
+        agg_fct = met.percentiles(h_fct.sum(0), qs)
+        wn, wmean, wstd = met.welford_finalize(
+            np.asarray(out["wn"])[k].sum(0),
+            # merged mean across seeds: weight per-seed means by counts
+            _wmerge_mean(np.asarray(out["wn"])[k],
+                         np.asarray(out["wmean"])[k]),
+            _wmerge_m2(np.asarray(out["wn"])[k],
+                       np.asarray(out["wmean"])[k],
+                       np.asarray(out["wm2"])[k]))
+        jobs = {}
+        tb = tenant_bytes(out["fbytes"], t)
+        for j, name in enumerate(t.job_names):
+            if name == traffic.PAD_JOB_NAME:
+                continue
+            jobs[name] = {
+                "completions": float(wn[j]),
+                "slowdown_mean": float(wmean[j]),
+                "slowdown_std": float(wstd[j]),
+                "bytes_mean": float(tb[k, :, j].mean()),
+            }
+        res.append({
+            "system": t.spec.system, "n_nodes": t.spec.n_nodes,
+            "dt_s": t.dt,
+            "qdelay_s": {str(q): float(v) for q, v in agg_qd.items()},
+            "fct_s": {str(q): float(v) for q, v in agg_fct.items()},
+            "fct_samples": float(h_fct.sum()),
+            "qdelay_samples": float(h_qd.sum()),
+            "jobs": jobs,
+        })
+    return res
+
+
+def _wmerge_mean(wn, wmean):
+    tot = np.maximum(wn.sum(0), 1.0)
+    return (wn * wmean).sum(0) / tot
+
+
+def _wmerge_m2(wn, wmean, wm2):
+    """Chan merge of per-seed accumulators into one (host side, exact)."""
+    tot = np.maximum(wn.sum(0), 1.0)
+    gmean = (wn * wmean).sum(0) / tot
+    return wm2.sum(0) + (wn * (wmean - gmean) ** 2).sum(0)

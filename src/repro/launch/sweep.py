@@ -104,7 +104,8 @@ class ShardedOut(Mapping):
 
 
 def dispatch_hetero(geoms, params, n_iters, *, mesh, shard_axis="cell",
-                    chunk=2048, max_chunks=98, stride=8) -> ShardedOut:
+                    chunk=2048, max_chunks=98, stride=8,
+                    **engine_kw) -> ShardedOut:
     """Per-device async dispatch of a run_cells_hetero batch: shard the
     requested axis across ``mesh``'s devices, dispatch every shard
     through the standard single-device jit (bit-identical executables),
@@ -126,7 +127,8 @@ def dispatch_hetero(geoms, params, n_iters, *, mesh, shard_axis="cell",
             jax.device_put(g, dev),
             jax.device_put(_tree_slice(params, lo, hi, axis), dev),
             jax.device_put(n_iters, dev),
-            chunk=chunk, max_chunks=max_chunks, stride=stride))
+            chunk=chunk, max_chunks=max_chunks, stride=stride,
+            **engine_kw))
     return ShardedOut(outs, axis)
 
 
@@ -140,7 +142,7 @@ def device_launcher(mesh, *, shard_axis: str = "cell",
                          f"got {dispatch!r}")
 
     def launcher(geoms, params, n_iters, *, chunk=2048, max_chunks=98,
-                 stride=8):
+                 stride=8, **engine_kw):
         if dispatch == "shard_map":
             from repro.core.fabric import simulator as sim
 
@@ -148,10 +150,11 @@ def device_launcher(mesh, *, shard_axis: str = "cell",
                                         chunk=chunk, max_chunks=max_chunks,
                                         stride=stride, mesh=mesh,
                                         shard_axis=shard_axis,
-                                        donate=donate)
+                                        donate=donate, **engine_kw)
         return dispatch_hetero(geoms, params, n_iters, mesh=mesh,
                                shard_axis=shard_axis, chunk=chunk,
-                               max_chunks=max_chunks, stride=stride)
+                               max_chunks=max_chunks, stride=stride,
+                               **engine_kw)
 
     return launcher
 

@@ -12,7 +12,8 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import SCENARIO_KEYS, expected_grid_keys  # noqa: E402
+from benchmarks.common import (SCENARIO_KEYS, expected_grid_keys,  # noqa: E402
+                               expected_point_keys)
 from repro.core import scenarios as scen  # noqa: E402
 from repro.core.fabric import systems  # noqa: E402
 
@@ -56,10 +57,19 @@ def test_registered_family_runs_and_emits_driver_columns(name):
         # points/microbench families: the matching driver interprets the
         # tuples — validate the references they carry
         assert scenario.points or scenario.microbench_sizes
+        if scenario.points:
+            # cache-key layout: POINT_KEYS and the point tuples must agree
+            # (raises on drift), and points must be unique cache keys
+            _, pts = expected_point_keys(scenario)
+            assert len(pts) == len(set(pts)), name
         if name == "fig3_sawtooth":
             assert all(s in systems.PRESETS for s, _ in scenario.points)
         if name == "fig4_nslb":
             assert {m for m, _ in scenario.points} <= {"nslb", "ecmp"}
+        if name == "fleet_replay":
+            for s, n, n_seeds in scenario.points:
+                assert s in systems.PRESETS, (name, s)
+                assert int(n) >= 2 and int(n_seeds) >= 1, (name, n, n_seeds)
         return
 
     scenario, grid = _shrunk(scenario)

@@ -1,0 +1,360 @@
+"""Fleet workload replay: seeded generation, streaming-metric exactness,
+padding inertness, compile sharing (ISSUE 8, DESIGN.md §15).
+
+The two load-bearing contracts pinned here:
+
+* **Exactness** — the in-scan streaming histograms reproduce, bin for
+  bin, the post-hoc histogram of the materialized step_debug samples
+  (same bin_index formula, same weights), across routing policies and dt
+  ladders; the streaming Welford merge matches the post-hoc weighted
+  mean/std to fp32 tolerance. The streaming path may lose within-bin
+  resolution, never samples.
+* **Invariance** — lowering a seed alone or inside a 1024-lane vmap is
+  bit-identical, and padding a template to a larger geometry bucket
+  leaves every real-lane metric bit-identical (pad flows/jobs are inert
+  in the accumulators, same contract as geometry pads).
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bench, envelopes, metrics as met
+from repro.core import workload as wl
+from repro.core.fabric import simulator as sim
+from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
+                                       POLICY_FIXED, splitmix64,
+                                       splitmix64_hilo)
+
+
+@functools.lru_cache(maxsize=None)
+def _template():
+    """One small shared template (topology binding is host-expensive)."""
+    spec = wl.WorkloadSpec(
+        system="cresco8", n_nodes=8, short_slots=8, arrivals_mean=4.0,
+        horizon_s=1.5e-4, tenant_bytes=float(1 << 18),
+        short_bytes_median=float(64 << 10), tenant_stagger_s=20e-6)
+    return wl.build_template(spec)
+
+
+# --------------------------------------------------------------------------
+# splitmix64 limb emulation + envelope hash pins (satellite: telegraph
+# envelope now uses the pinned splitmix64 stream, not an ad-hoc LCG)
+# --------------------------------------------------------------------------
+
+
+def test_splitmix64_hilo_matches_uint64_reference():
+    x = np.concatenate([np.arange(512, dtype=np.uint64),
+                        np.uint64(1) << np.arange(64, dtype=np.uint64),
+                        np.array([0xDEADBEEFCAFEBABE, 2**64 - 1],
+                                 np.uint64)])
+    ref = splitmix64(x)
+    hi, lo = splitmix64_hilo((x >> np.uint64(32)).astype(np.uint32),
+                             x.astype(np.uint32))
+    got = (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_splitmix64_hilo_traced_matches_host():
+    import jax
+    import jax.numpy as jnp
+
+    x = np.arange(257, dtype=np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    hi, lo = splitmix64_hilo((x >> np.uint64(32)).astype(np.uint32),
+                             x.astype(np.uint32))
+    jhi, jlo = jax.jit(lambda h, l: splitmix64_hilo(h, l, xp=jnp))(
+        (x >> np.uint64(32)).astype(np.uint32), x.astype(np.uint32))
+    np.testing.assert_array_equal(np.asarray(jhi), hi)
+    np.testing.assert_array_equal(np.asarray(jlo), lo)
+
+
+def test_random_envelope_pinned_vectors():
+    """Re-pinned telegraph vectors (seed -> on/off pattern) — a hash
+    change is an intentional, visible event, not silent drift."""
+    t = np.array([0.0, 0.0005, 0.003, 0.0101, 0.25])
+    for seed, want in ((3, [0, 0, 0, 0, 0]), (1, [0, 0, 1, 0, 0])):
+        prof = envelopes.random_onoff(0.002, 0.006, seed=seed)
+        np.testing.assert_array_equal(envelopes.envelope_np(
+            prof.params(), t), np.asarray(want, np.float64))
+        traced = [float(envelopes.envelope_at(prof.params(), ti))
+                  for ti in t]
+        np.testing.assert_array_equal(np.asarray(traced), want)
+
+
+def test_random_envelope_duty_cycle_and_determinism():
+    prof = envelopes.random_onoff(0.002, 0.006, seed=9)
+    t = np.arange(40_000) * 1e-4
+    v1 = envelopes.envelope_np(prof.params(), t)
+    v2 = envelopes.envelope_np(prof.params(), t)
+    np.testing.assert_array_equal(v1, v2)
+    assert abs(v1.mean() - 0.25) < 0.04
+    # distinct seeds give distinct telegraph patterns
+    v3 = envelopes.envelope_np(
+        envelopes.random_onoff(0.002, 0.006, seed=10).params(), t)
+    assert (v1 != v3).any()
+
+
+# --------------------------------------------------------------------------
+# Workload generation: reproducible, batch-invariant, inert idle slots
+# --------------------------------------------------------------------------
+
+
+def test_lower_seed_reproducible_and_batch_invariant():
+    t = _template()
+    p_one = wl.lower_seed(t, 3)
+    p_again = wl.lower_seed(t, 3)
+    p_batch = wl.lower_seeds(t, np.arange(1024))
+    for f in ("bytes_per_iter", "flow_start", "fct_mask", "kind"):
+        one = np.asarray(getattr(p_one, f))
+        np.testing.assert_array_equal(one, np.asarray(getattr(p_again, f)))
+        np.testing.assert_array_equal(
+            one, np.asarray(getattr(p_batch, f))[3],
+            err_msg=f"{f}: seed 3 alone != lane 3 of the 1024-seed vmap")
+    # different seeds actually vary the draw
+    bpi = np.asarray(p_batch.bytes_per_iter)
+    assert (bpi[0] != bpi[1]).any()
+
+
+def test_lowered_params_structure():
+    t = _template()
+    p = wl.lower_seed(t, 0)
+    bpi = np.asarray(p.bytes_per_iter)
+    # inactive short slots carry exactly 0 bytes (inert-flow contract)
+    shorts = bpi[t.short_idx]
+    assert ((shorts == 0.0) | (shorts > 0.0)).all()
+    assert (np.asarray(p.fct_mask)[t.short_idx] == 1.0).all()
+    # short arrivals land inside the horizon; tenants inside the stagger
+    fs = np.asarray(p.flow_start)
+    assert (fs[t.short_idx] >= 0).all()
+    assert (fs[t.short_idx] <= t.spec.horizon_s).all()
+    tenant_rows = np.asarray(t.job_is_tenant)[t.flow_job] > 0
+    assert (fs[tenant_rows] <= t.spec.tenant_stagger_s).all()
+    # every flow's CC kind comes from the declared mix
+    assert set(np.unique(np.asarray(p.kind))) <= set(t.mix_kinds.tolist())
+    # per-job kind: all flows of one job share a kind
+    fj = t.flow_job
+    kinds = np.asarray(p.kind)
+    for j in range(t.n_jobs):
+        m = fj == j
+        if m.any():
+            assert len(np.unique(kinds[m])) == 1, f"job {j} mixed kinds"
+
+
+# --------------------------------------------------------------------------
+# Streaming metrics == post-hoc metrics (the exactness contract)
+# --------------------------------------------------------------------------
+
+
+def _posthoc_replay(params, n_steps):
+    """Materialize per-step samples via step_debug and fold them post-hoc
+    — the oracle the streaming carry must reproduce."""
+    import jax
+
+    t = _template()
+    geom = t.geom
+    step_j = jax.jit(lambda p, s: sim.step_debug(geom, p, s))
+    state = sim.init_state(geom, params, metrics=True)
+    fct_mask = np.asarray(params.fct_mask, np.float64)
+    ideal = np.asarray(params.bytes_per_iter, np.float64) \
+        / np.maximum(np.asarray(params.host_caps, np.float64), 1.0)
+    qd_x, qd_w, fct_x, fct_w, sl_x, sl_w = [], [], [], [], [], []
+    for _ in range(n_steps):
+        prev_armed = np.asarray(state["armed_t"], np.float64)
+        state, _, aux = step_j(params, state)
+        t_new = float(np.asarray(state["t"]))
+        qd_x.append(np.asarray(aux["qdel"], np.float64))
+        qd_w.append(np.asarray(aux["active"], np.float64))
+        done = np.asarray(aux["done"], np.float64)
+        fct = t_new - prev_armed
+        fct_x.append(fct)
+        fct_w.append(done * fct_mask)
+        sl_x.append(fct / np.maximum(ideal, 1e-9))
+        sl_w.append(done)
+    return state, (np.concatenate(qd_x), np.concatenate(qd_w),
+                   np.concatenate(fct_x), np.concatenate(fct_w),
+                   np.concatenate(sl_x), np.concatenate(sl_w))
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dt_mult=st.sampled_from([1.0, 0.5, 2.0]),
+       policy=st.sampled_from([POLICY_FIXED, POLICY_ECMP, POLICY_ADAPTIVE]))
+def test_streaming_metrics_match_posthoc(seed, dt_mult, policy):
+    import jax.numpy as jnp
+
+    t = _template()
+    params = wl.lower_seed(t, seed)
+    params = dataclasses.replace(
+        params,
+        dt=jnp.asarray(t.dt * dt_mult, jnp.float32),
+        policy=jnp.asarray(policy, np.asarray(params.policy).dtype))
+    n_steps = 192
+    state, (qd_x, qd_w, fct_x, fct_w, sl_x, sl_w) = \
+        _posthoc_replay(params, n_steps)
+
+    # histograms: EXACT, bin for bin (same bin_index, same weights)
+    np.testing.assert_array_equal(np.asarray(state["h_qd"]),
+                                  met.np_hist(qd_x, qd_w))
+    np.testing.assert_array_equal(np.asarray(state["h_fct"]),
+                                  met.np_hist(fct_x, fct_w))
+    assert float(np.asarray(state["h_qd"]).sum()) == qd_w.sum()
+
+    # Welford: counts exact, moments to fp32 tolerance
+    fj = t.flow_job
+    J = t.n_jobs
+    wn, wmean, wstd = met.welford_finalize(
+        np.asarray(state["wn"]), np.asarray(state["wmean"]),
+        np.asarray(state["wm2"]))
+    for j in range(J):
+        m = fj == j
+        w = sl_w.reshape(n_steps, -1)[:, m].ravel()
+        x = sl_x.reshape(n_steps, -1)[:, m].ravel()
+        assert wn[j] == w.sum(), f"job {j} completion count"
+        if w.sum() > 0:
+            mean = (w * x).sum() / w.sum()
+            var = (w * (x - mean) ** 2).sum() / w.sum()
+            np.testing.assert_allclose(wmean[j], mean, rtol=1e-4,
+                                       atol=1e-9)
+            np.testing.assert_allclose(wstd[j], np.sqrt(var), rtol=1e-3,
+                                       atol=1e-7)
+
+
+def test_percentiles_of_known_samples():
+    rng = np.random.default_rng(0)
+    x = 10.0 ** rng.uniform(-6, -2, 20_000)
+    h = met.np_hist(x)
+    got = met.percentiles(h, (0.5, 0.99))
+    width = 10.0 ** (1.0 / met.BINS_PER_DECADE)
+    for q in (0.5, 0.99):
+        exact = np.quantile(x, q)
+        assert got[q] / exact < width and exact / got[q] < width, \
+            (q, got[q], exact)
+    # empty histogram -> NaN, not a crash
+    assert np.isnan(met.percentiles(np.zeros(met.NBINS), (0.5,))[0.5])
+
+
+# --------------------------------------------------------------------------
+# Replay engine integration: padding inertness, compile sharing,
+# metrics-off bit parity
+# --------------------------------------------------------------------------
+
+_REPLAY_KW = dict(chunk=64, max_chunks=3, stride=8, with_trace=False)
+
+
+def _run_at_dims(t, dims, seeds, metrics=True):
+    tp = wl.pad_template(t, dims)  # geom is already padded to dims
+    geoms = sim.stack_geometries([tp.geom])
+    params = sim.stack_params([wl.lower_seeds(tp, seeds)])
+    return sim.run_cells_hetero(
+        geoms, params, np.int32(sim.TDONE_SLOTS),
+        metrics=metrics, **_REPLAY_KW), tp
+
+
+def test_padding_inert_for_streaming_metrics():
+    """Inflating every bucket dimension must leave each real lane's
+    histograms, Welford accumulators and delivered bytes bit-identical
+    (pad flows never contribute a sample)."""
+    t = _template()
+    seeds = np.arange(4)
+    dims0 = sim.geometry_dims(t.geom)
+    dims1 = dataclasses.replace(
+        dims0, n_links=dims0.n_links + 16, n_flows=dims0.n_flows + 32,
+        n_jobs=dims0.n_jobs + 3, n_sw=dims0.n_sw + 2,
+        n_src=dims0.n_src + 2)
+    out0, _ = _run_at_dims(t, dims0, seeds)
+    out1, _ = _run_at_dims(t, dims1, seeds)
+    F, J = dims0.n_flows, dims0.n_jobs
+    np.testing.assert_array_equal(np.asarray(out0["t"]),
+                                  np.asarray(out1["t"]))
+    np.testing.assert_array_equal(np.asarray(out0["h_qd"]),
+                                  np.asarray(out1["h_qd"]))
+    np.testing.assert_array_equal(np.asarray(out0["h_fct"]),
+                                  np.asarray(out1["h_fct"]))
+    np.testing.assert_array_equal(np.asarray(out0["fbytes"]),
+                                  np.asarray(out1["fbytes"])[..., :F])
+    for k in ("wn", "wmean", "wm2"):
+        np.testing.assert_array_equal(np.asarray(out0[k]),
+                                      np.asarray(out1[k])[..., :J])
+    # pad lanes contributed nothing
+    assert np.asarray(out1["fbytes"])[..., F:].sum() == 0.0
+    assert np.asarray(out1["wn"])[..., J:].sum() == 0.0
+
+
+def test_replay_one_compile_per_bucket_and_metrics_off_parity():
+    t = _template()
+    seeds = np.arange(5)  # B=5: unique shape -> fresh compile
+    dims = sim.geometry_dims(t.geom)
+    before = sim.trace_count("run_cells_hetero")
+    out_m, _ = _run_at_dims(t, dims, seeds, metrics=True)
+    out_m2, _ = _run_at_dims(t, dims, seeds, metrics=True)
+    assert sim.trace_count("run_cells_hetero") - before == 1, \
+        "same bucket + same seed-batch shape must share one compile"
+    out_p, _ = _run_at_dims(t, dims, seeds, metrics=False)
+    # metrics accumulation is observation, not dynamics: engine outputs
+    # are bit-identical with the carry on or off
+    for k in ("t", "it", "fbytes", "qd_acc"):
+        if k in out_p:
+            np.testing.assert_array_equal(np.asarray(out_m[k]),
+                                          np.asarray(out_p[k]),
+                                          err_msg=f"{k} differs")
+    for k in ("h_qd", "h_fct", "wn", "wmean", "wm2"):
+        assert k in out_m and k not in out_p
+    # repeated identical replay is bit-reproducible
+    np.testing.assert_array_equal(np.asarray(out_m["h_qd"]),
+                                  np.asarray(out_m2["h_qd"]))
+
+
+def test_1024_seed_replay_single_compile():
+    """The acceptance-scale batch: 1024 seeds share ONE compile per
+    geometry bucket, and the metric carry stays O(B x NBINS) — no
+    buffer scales with the step budget."""
+    t = _template()
+    tp = wl.pad_template(t, sim.geometry_dims(t.geom))
+    geoms = sim.stack_geometries([tp.geom])
+    params = sim.stack_params([wl.lower_seeds(tp, np.arange(1024))])
+    before = sim.trace_count("run_cells_hetero")
+    out = sim.run_cells_hetero(geoms, params, np.int32(sim.TDONE_SLOTS),
+                               chunk=16, max_chunks=1, stride=8,
+                               metrics=True, with_trace=False)
+    assert sim.trace_count("run_cells_hetero") - before == 1
+    assert np.asarray(out["h_qd"]).shape == (1, 1024, met.NBINS)
+    assert np.asarray(out["h_fct"]).shape == (1, 1024, met.NBINS)
+    # with_trace=False collapses the trace buffer to a single slot
+    assert np.asarray(out["trace"]).shape[-1] == 1
+
+
+def test_run_replay_end_to_end_summary():
+    t = _template()
+    out, padded = wl.run_replay([t], np.arange(4), chunk=64, metrics=True)
+    (s,) = wl.summarize_replay(out, padded)
+    assert s["system"] == "cresco8" and s["n_nodes"] == 8
+    assert s["qdelay_samples"] > 0
+    # quantile monotonicity on the aggregate histograms
+    qd = s["qdelay_s"]
+    assert qd["0.999"] >= qd["0.99"] >= qd["0.5"] or np.isnan(qd["0.5"])
+    # per-job summaries exist for every real job, none for pads
+    names = set(s["jobs"])
+    assert "shorts" in names
+    assert any(n.startswith("tenant0") for n in names)
+    assert not any(n == "_pad" for n in names)
+
+
+def test_short_slots_one_shot_and_horizon():
+    """A drained short slot never re-arms (SHORT_GAP_NEVER): running the
+    replay twice as long never increases a slot's delivered bytes beyond
+    drawn + one Euler-step quantum."""
+    t = _template()
+    seeds = np.arange(3)
+    out, (tp,) = wl.run_replay([t], seeds, chunk=64, metrics=False)
+    fb = np.asarray(out["fbytes"])[0]
+    drawn = np.asarray(wl.lower_seeds(tp, seeds).bytes_per_iter)
+    quantum = tp.host_caps * tp.dt
+    excess = fb[:, tp.short_idx] - drawn[:, tp.short_idx] \
+        - quantum[tp.short_idx][None, :]
+    assert (excess <= 1.0).all(), float(excess.max())
+    # inactive slots (0 drawn bytes) delivered exactly nothing
+    idle = drawn[:, tp.short_idx] == 0.0
+    assert (fb[:, tp.short_idx][idle] == 0.0).all()
