@@ -1,0 +1,303 @@
+"""Link-fault & degradation scenario driver: flapping links, dying
+optics, fabric jitter, and the intra-node (NVLink/PCIe) stage, plus the
+coordinator-side StepMonitor detection demo.
+
+``PYTHONPATH=src python -m benchmarks.fault_scenarios [--quick] [--write]``
+
+--quick (the CI smoke) runs the link_fault / intra_node quick scenarios
+and asserts the engine contracts:
+
+* inertness gate — an all-``none`` fault table and an +inf-capacity
+  intra-node stage are BIT-IDENTICAL to the fault-free engine on every
+  state leaf, on both step-core backends (the DESIGN.md §16 contract);
+* fault lanes hurt — the hot-link flap lane lands well below ratio 1.0
+  and the dying-optic lane degrades monotonically into its window;
+* the intra-node stage is monotone in node capacity;
+* the mitigation panel reports a baseline-guarded per-fabric winner for
+  the flapping-link scenario (score.winners_by_system);
+* a StepMonitor fed the replayed per-step queue-delay stream trips
+  inside the flap window, and after the elastic_plan + reset(rebaseline)
+  response stays untripped in the degraded steady state.
+
+Exit code is non-zero on any MISMATCH, so CI catches regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import scenario_rows, size_label
+from repro.core import bench, congestion as cong, scenarios
+from repro.core.fabric import simulator as sim, systems
+from repro.core.fabric.routing import POLICY_ADAPTIVE, POLICY_ECMP
+from repro.core.mitigation import score, search
+from repro.core.mitigation.search import Candidate
+from repro.runtime import fault as rfault
+
+GATE_STEPS = 48  # inertness-gate scan length (covers several flap slots)
+
+
+# ---------------------------------------------------------------------------
+# claim 1: inertness gate (bit-identity on every state leaf, both backends)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _scan_states(geom, p, state, backend):
+    return jax.lax.scan(
+        lambda s, _: sim.step(geom, p, s, backend=backend),
+        state, None, length=GATE_STEPS)
+
+
+def _leaf_mismatches(sa, sb) -> List[str]:
+    return [k for k in sa
+            if not bool(jnp.all(sa[k] == sb[k]))]
+
+
+def inertness_gate() -> bool:
+    """All-off fault table + inf-cap intra-node stage vs the plain
+    engine: every state leaf must match bit-for-bit after GATE_STEPS
+    steps, on both the ref and the fused Pallas step cores."""
+    sysp = systems.get_system("leonardo")
+    case = bench.build_case(sysp, 8, "ring_allgather", "incast")
+    case_in = bench.build_case(sysp, 8, "ring_allgather", "incast",
+                               intra_node=True)
+    v = 2 << 20
+    dt = bench.choose_dt(case.topo, case.n_victims, v, case.lat())
+    prof = cong.steady()
+    p_plain = case.cell_params(v, prof, dt)              # fault leaf absent
+    p_table = case.cell_params(v, prof, dt,
+                               with_fault_table=True)    # all-``none`` table
+    p_intra = case_in.cell_params(v, prof, dt)           # node_cap == +inf
+    ok = True
+    for backend in ("ref", "pallas"):
+        s0, gp0 = _scan_states(case.geom, p_plain,
+                               sim.init_state(case.geom, p_plain), backend)
+        s1, gp1 = _scan_states(case.geom, p_table,
+                               sim.init_state(case.geom, p_table), backend)
+        s2, gp2 = _scan_states(case_in.geom, p_intra,
+                               sim.init_state(case_in.geom, p_intra), backend)
+        bad_t = _leaf_mismatches(s0, s1) \
+            + ([] if bool(jnp.all(gp0 == gp1)) else ["goodput"])
+        bad_n = _leaf_mismatches(s0, s2) \
+            + ([] if bool(jnp.all(gp0 == gp2)) else ["goodput"])
+        verdict = "bit-identical" if not (bad_t or bad_n) else \
+            f"MISMATCH (table: {bad_t}, intra: {bad_n})"
+        print(f"# inertness[{backend}]: all-none table & inf-cap node "
+              f"stage vs plain engine, {GATE_STEPS} steps -> {verdict}")
+        ok &= not (bad_t or bad_n)
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# claims 2+3: scenario families (registry-driven, cached like every bench)
+# ---------------------------------------------------------------------------
+
+def print_rows(name: str, rows: List[Dict]) -> None:
+    print(f"\n# {name}")
+    print(f"{'system':>10} {'n':>4} {'aggr':>8} {'size':>8} "
+          f"{'profile':>42} {'ratio':>7}")
+    for r in rows:
+        print(f"{r['system']:>10} {r['n_nodes']:>4} {r['aggressor']:>8} "
+              f"{size_label(r['vector_bytes']):>8} {r['profile']:>42} "
+              f"{float(r['ratio']):>7.3f}")
+
+
+def fault_claims(quick: bool, force: bool) -> Dict:
+    lf = scenarios.get("link_fault", quick)
+    rows_lf = scenario_rows(lf, force=force)
+    print_rows(f"link_fault — {lf.description}", rows_lf)
+
+    intra = scenarios.get("intra_node", quick)
+    rows_in = scenario_rows(intra, force=force)
+    print_rows(f"intra_node — {intra.description}", rows_in)
+
+    # flapping hot link: duty-0.3 outage slots must cost well over the
+    # measurement noise (the victim's hot link is down ~30% of the time)
+    flap = [float(r["ratio"]) for r in rows_lf
+            if "flap[" in r["profile"] and r["profile"].startswith("off")]
+    ok_flap = bool(flap) and max(flap) < 0.9
+    print(f"\n# flap check: hot-link flap ratios "
+          f"{[f'{x:.2f}' for x in flap]} (all < 0.9) -> "
+          f"{'REPRODUCED' if ok_flap else 'MISMATCH'}")
+
+    # dying optic: a persistent 70% capacity loss on the hot link cannot
+    # be free either
+    optic = [float(r["ratio"]) for r in rows_lf
+             if "degrade[" in r["profile"]]
+    ok_optic = bool(optic) and max(optic) < 0.95
+    print(f"# dying-optic check: degrade ratios "
+          f"{[f'{x:.2f}' for x in optic]} (all < 0.95) -> "
+          f"{'REPRODUCED' if ok_optic else 'MISMATCH'}")
+
+    # intra-node stage: ratio must be monotone (non-increasing, small
+    # slack) as the node's internal bandwidth shrinks
+    fracs_seen: Dict[float, List[float]] = {}
+    for r in rows_in:
+        frac = float(r["profile"].rsplit("+node", 1)[1].rstrip("x"))
+        fracs_seen.setdefault(frac, []).append(float(r["ratio"]))
+    fracs = sorted(fracs_seen, reverse=True)
+    means = [float(np.mean(fracs_seen[f])) for f in fracs]
+    ok_intra = all(b <= a + 0.05 for a, b in zip(means, means[1:])) \
+        and means[-1] < means[0] - 0.05
+    print(f"# intra-node check: node-cap fracs {fracs} -> mean ratios "
+          f"{[f'{m:.2f}' for m in means]} (monotone, tightest frac "
+          f"hurts) -> {'REPRODUCED' if ok_intra else 'MISMATCH'}")
+    return {"rows_lf": rows_lf, "rows_in": rows_in, "ok_flap": ok_flap,
+            "ok_optic": ok_optic, "ok_intra": ok_intra,
+            "flap": flap, "optic": optic,
+            "intra": {str(f): m for f, m in zip(fracs, means)}}
+
+
+# ---------------------------------------------------------------------------
+# claim 4: per-fabric mitigation winner for the flapping-link panel
+# ---------------------------------------------------------------------------
+
+def fault_panel(quick: bool) -> Dict:
+    panel = score.panel_from_scenario(score.FAULT_PANEL_SCENARIO,
+                                      quick=True)
+    cands = [Candidate(policy=POLICY_ECMP),
+             Candidate(policy=POLICY_ADAPTIVE),
+             Candidate(cc=(("hol_factor", 0.45),))]
+    print(f"\n# fault panel: {len(cands) + 1} candidates x {len(panel)} "
+          "flap/degrade cells (one vmapped batch)")
+    scores = score.score_table(panel, cands,
+                               n_iters=8 if quick else 12,
+                               warmup=2 if quick else 3,
+                               max_steps=120_000)
+    runs = [r for s in scores for r in s.cells]
+    winners = score.winners_by_system(runs)
+    ok = bool(winners)
+    for sysname, w in winners.items():
+        good = np.isfinite(w.ratio_min)
+        ok &= bool(good)
+        print(f"#   {sysname}: winner {w.candidate} "
+              f"(ratio_min={w.ratio_min:.3f}, jain={w.jain:.3f}, "
+              f"base_rel={w.t_base_worst_rel:.3f})")
+    print(f"# fault-panel check: baseline-guarded winner per fabric -> "
+          f"{'REPRODUCED' if ok else 'MISMATCH'}")
+    return {"ok": ok,
+            "winners": {s: w.candidate for s, w in winners.items()}}
+
+
+# ---------------------------------------------------------------------------
+# claim 5: StepMonitor detection demo on the replayed queue-delay stream
+# ---------------------------------------------------------------------------
+
+def monitor_demo() -> Dict:
+    """Coordinator-side detection: replay the per-step victim queue-delay
+    stream of a flap run into a StepMonitor (window duration = base step
+    latency + mean queue delay, via the injectable clock). The monitor
+    must trip INSIDE the flap window, and after the elastic-rescale
+    response (elastic_plan + reset(rebaseline=True)) must accept the
+    degraded steady state instead of staying tripped forever."""
+    sysp = systems.get_system("leonardo")
+    case = bench.build_case(sysp, 8, "ring_allgather", "")
+    v = 2 << 20
+    dt = bench.choose_dt(case.topo, case.n_victims, v, case.lat())
+    steps, window = 600, 20
+    t_fault = 0.5 * steps * dt  # flap starts mid-replay, runs to the end
+    prof = cong.with_faults(
+        cong.no_congestion(),
+        cong.flap(t_fault, 10.0, duty=0.9, seed=5))
+    p = case.cell_params(v, prof, dt, with_fault_table=True)
+
+    geom = case.geom
+
+    def body(s, _):
+        s2, _, aux = sim.step_debug(geom, p, s)
+        vq = jnp.sum(aux["qdel"] * geom.is_victim) \
+            / jnp.maximum(jnp.sum(geom.is_victim), 1)
+        return s2, vq
+    qdel = np.asarray(jax.jit(
+        lambda s: jax.lax.scan(body, s, None, length=steps)[1])(
+            sim.init_state(geom, p)))
+
+    durs = [case.lat() + float(np.mean(w))
+            for w in qdel.reshape(-1, window)]
+    fault_win = int(t_fault / dt) // window
+    clock_t = [0.0]
+    mon = rfault.StepMonitor(threshold=2.5, trip_after=3,
+                             clock=lambda: clock_t[0])
+    tripped_at, plan = None, None
+    for i, d in enumerate(durs):
+        mon.start_step()
+        clock_t[0] += d
+        mon.end_step(i)
+        if mon.tripped and tripped_at is None:
+            tripped_at = i
+            # coordinator response: drop the node behind the flapping
+            # link and rescale to the largest surviving grid, then
+            # rebaseline the monitor on the degraded steady state (the
+            # trip_after flagged windows themselves — flagged steps never
+            # fed the EMA, which is the bug class reset() exists for)
+            plan = rfault.elastic_plan(int(geom.n_src) - 1, 2)
+            mon.reset(rebaseline=True, window=3)
+    retripped = mon.tripped or (tripped_at is not None
+                                and any(st.flagged for st in
+                                        mon.history[tripped_at + 1:]))
+    ok = (tripped_at is not None and tripped_at >= fault_win
+          and not retripped)
+    print(f"\n# monitor demo: qdel windows clean "
+          f"{np.mean(durs[:fault_win]) * 1e6:.1f}us -> flap "
+          f"{np.mean(durs[fault_win:]) * 1e6:.1f}us; tripped at window "
+          f"{tripped_at} (flap enters at {fault_win}), elastic_plan -> "
+          f"{plan}, post-reset tripped={mon.tripped} -> "
+          f"{'REPRODUCED' if ok else 'MISMATCH'}")
+    return {"ok": ok, "tripped_window": tripped_at,
+            "fault_window": fault_win, "plan": list(plan) if plan else None,
+            "retripped_after_reset": bool(retripped)}
+
+
+def main(quick: bool = False, force: bool = False, write: bool = False,
+         out: str = "BENCH_engine.json") -> Dict:
+    t0 = time.time()
+    ok_inert = inertness_gate()
+    claims = fault_claims(quick, force)
+    panel = fault_panel(quick)
+    mon = monitor_demo()
+
+    elapsed = time.time() - t0
+    print(f"\n[fault_scenarios] done in {elapsed:.0f}s")
+    ok = (ok_inert and claims["ok_flap"] and claims["ok_optic"]
+          and claims["ok_intra"] and panel["ok"] and mon["ok"])
+    doc_row = {
+        "quick": bool(quick), "ok": bool(ok),
+        "inert_bit_identical": bool(ok_inert),
+        "flap_ratio_worst": min(claims["flap"]) if claims["flap"] else None,
+        "optic_ratio_worst": min(claims["optic"]) if claims["optic"] else None,
+        "intra_ratio_by_frac": claims["intra"],
+        "winner_by_fabric": panel["winners"],
+        "monitor": {k: v for k, v in mon.items() if k != "ok"},
+        "elapsed_s": round(elapsed, 1),
+    }
+    if write:
+        path = Path(out)
+        doc = json.loads(path.read_text()) if path.exists() else {}
+        doc["faults"] = doc_row
+        path.write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"[fault_scenarios] wrote {path}:faults")
+    if not ok:
+        print("[fault_scenarios] FAILED checks", file=sys.stderr)
+        sys.exit(1)
+    return doc_row
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--force", action="store_true",
+                   help="ignore the scenario-row CSV cache")
+    p.add_argument("--write", action="store_true",
+                   help="update BENCH_engine.json['faults']")
+    p.add_argument("--out", default="BENCH_engine.json")
+    a = p.parse_args()
+    main(quick=a.quick, force=a.force, write=a.write, out=a.out)

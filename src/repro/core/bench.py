@@ -228,19 +228,33 @@ class GridCase:
             self.job_names = ["victim", "aggressor"]
 
     def cell_params(self, vector_bytes: float, profile: cong.Profile,
-                    dt: float, n_flows: Optional[int] = None) -> SimParams:
+                    dt: float, n_flows: Optional[int] = None,
+                    with_fault_table: bool = False) -> SimParams:
         """Per-cell traced params; ``n_flows`` pads the flow axis to a
         geometry-bucket width (pad flows: 0 bytes — never alive — and a
-        positive dummy host cap so no divide ever sees 0)."""
+        positive dummy host cap so no divide ever sees 0).
+
+        ``with_fault_table=True`` forces the inert all-``none`` fault
+        table onto lanes whose profile carries no events — stacked lanes
+        of one grid must share a pytree structure, and the inert table is
+        bit-identical to running without one (DESIGN.md §16)."""
         bpi = np.where(self.sweep_mask, self.unit_bytes * vector_bytes,
                        self.unit_bytes)
         host_caps = self.host_caps
         if n_flows is not None and n_flows > len(bpi):
             bpi = traffic.pad_rows(bpi, n_flows, 0.0)
             host_caps = traffic.pad_rows(host_caps, n_flows, 1.0)
+        fault = profile.fault_params()
+        if fault is None and with_fault_table:
+            fault = cong.no_fault_table()
+        # intra-node stage capacity: a fraction of the fastest NIC on the
+        # case (inf = stage inert; the geometry flag gates the trace)
+        node_cap = np.inf if profile.node_cap_frac <= 0 else \
+            float(profile.node_cap_frac) * float(np.max(self.host_caps))
         return make_params(self.system.cc, dt=dt, bytes_per_iter=bpi,
                            host_caps=host_caps, env=profile.params(),
-                           policy=self.policy)
+                           policy=self.policy, fault=fault,
+                           node_cap=node_cap)
 
     def lat(self) -> float:
         return cong.latency_model(self.victim_coll, self.n_victims)
@@ -252,6 +266,7 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
                phased: bool = False,
                jobs: Optional[Sequence[traffic.JobSpec]] = None,
                policy_tables: bool = False,
+               intra_node: bool = False,
                seed: int = 7) -> GridCase:
     """Build the flow program + geometry once for a whole grid of cells.
 
@@ -293,7 +308,7 @@ def build_case(system: SystemPreset, n_nodes: int, victim_coll: str,
                                    k_max=system.k_max, phased=phased,
                                    policy_tables=policy_tables)
         n_victims = len(victims)
-    geom = make_geometry(topo, flows)
+    geom = make_geometry(topo, flows, intra_node=intra_node)
     return GridCase(system=system, n_nodes=n_nodes, victim_coll=victim_coll,
                     aggr_coll=aggr_coll, topo=topo, geom=geom,
                     unit_bytes=flows.bytes_per_iter.copy(),
@@ -437,12 +452,18 @@ def run_grid(system: Union[SystemPreset, Sequence[ScaleCell]], n_nodes: int,
                               trace_stride=trace_stride, phased=phased,
                               jobs=jobs, mesh=mesh, launcher=launcher)
     check_iter_budget(n_iters)
+    # fault/intra-node lanes: any faulted lane forces the inert table on
+    # its siblings (one pytree structure per stack); any node-capped lane
+    # arms the intra-node stage for the whole case (inert at inf)
+    with_ft = cong.needs_fault_table(profiles)
     case = build_case(system, n_nodes, victim_coll, aggr_coll,
-                      phased=phased, jobs=jobs)
+                      phased=phased, jobs=jobs,
+                      intra_node=any(p.node_cap_frac > 0 for p in profiles))
     dts = _cell_dts(case, sizes, len(profiles), dt, case.lat())
     cells = [(float(v), prof) for v in sizes
              for prof in [cong.no_congestion()] + list(profiles)]
-    params = stack_params([case.cell_params(v, prof, d)
+    params = stack_params([case.cell_params(v, prof, d,
+                                            with_fault_table=with_ft)
                            for (v, prof), d in zip(cells, dts)])
     max_chunks = -(-max_steps // chunk)
     out = run_cells(case.geom, params, jnp.asarray(n_iters, jnp.int32),
@@ -516,11 +537,13 @@ def launch_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
     axis out across devices). ``results()`` marshals."""
     check_iter_budget(n_iters)
     launcher = _resolve_launcher(mesh, launcher)
+    with_ft = cong.needs_fault_table(profiles)
+    intra = any(p.node_cap_frac > 0 for p in profiles)
     cases = []
     for sysname, n in cells:
         sysp = get_system(sysname) if isinstance(sysname, str) else sysname
         cases.append(build_case(sysp, int(n), victim_coll, aggr_coll,
-                                phased=phased, jobs=jobs))
+                                phased=phased, jobs=jobs, intra_node=intra))
     sizes, profiles = tuple(sizes), tuple(profiles)
     if not cases:
         return PendingGrid([], {}, sizes, profiles, [], n_iters, warmup,
@@ -532,7 +555,8 @@ def launch_scale_grid(cells: Sequence[ScaleCell], victim_coll: str,
     sub_cells = [(float(v), prof) for v in sizes
                  for prof in [cong.no_congestion()] + list(profiles)]
     params = stack_params([
-        stack_params([case.cell_params(v, prof, d, n_flows=dims.n_flows)
+        stack_params([case.cell_params(v, prof, d, n_flows=dims.n_flows,
+                                       with_fault_table=with_ft)
                       for (v, prof), d in zip(sub_cells, all_dts[k])])
         for k, case in enumerate(cases)])
     run = launcher if launcher is not None else run_cells_hetero
@@ -593,8 +617,10 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
     incast is placement-dependent; see allocate()).
     """
     check_iter_budget(n_iters)
+    with_ft = cong.needs_fault_table([profile])
     case = build_case(system, n_nodes, victim_coll, aggr_coll,
-                      phased=phased, jobs=jobs, seed=seed)
+                      phased=phased, jobs=jobs, seed=seed,
+                      intra_node=profile.node_cap_frac > 0)
     lat = case.lat()
     if dt is None:
         dt = choose_dt(case.topo, case.n_victims, vector_bytes, lat,
@@ -602,8 +628,10 @@ def run_point(system: SystemPreset, n_nodes: int, victim_coll: str,
     chunk, stride = 2048, 8
     max_chunks = -(-max_steps // chunk)
     params = stack_params([
-        case.cell_params(vector_bytes, cong.no_congestion(), dt),
-        case.cell_params(vector_bytes, profile, dt)])
+        case.cell_params(vector_bytes, cong.no_congestion(), dt,
+                         with_fault_table=with_ft),
+        case.cell_params(vector_bytes, profile, dt,
+                         with_fault_table=with_ft)])
     out = run_cells(case.geom, params, jnp.asarray(n_iters, jnp.int32),
                     chunk=chunk, max_chunks=max_chunks, stride=stride)
     base = summarize(out, n_iters=n_iters, warmup=warmup, dt=dt, chunk=chunk,

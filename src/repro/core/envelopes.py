@@ -58,7 +58,11 @@ def envelope_at(env, t):
     slot_len = jnp.maximum(p0, 1e-12)
     on_bursty = ((t % period) < p0).astype(jnp.float32)
     on_ramp = jnp.clip(t / slot_len, 0.0, 1.0)
-    slot = jnp.floor(t / slot_len).astype(jnp.uint32)
+    # mod before the cast: off/steady rows leave slot_len at its 1e-12
+    # floor, whose huge quotient would otherwise hit an out-of-range
+    # float->uint32 cast (platform-dependent under XLA; the selected
+    # value ignores those rows, but the lane must still be well-defined)
+    slot = jnp.mod(jnp.floor(t / slot_len), 2.0 ** 32).astype(jnp.uint32)
     # splitmix64 of (seed:32 | slot:32): full-period counter PRNG, every
     # output bit avalanches (replaces a weak LCG-style mix; DESIGN.md §15)
     h_hi, _ = splitmix64_hilo(seed.astype(jnp.uint32), slot, xp=jnp)
@@ -75,28 +79,237 @@ def envelope_at(env, t):
 
 def envelope_np(env: np.ndarray, t: np.ndarray) -> np.ndarray:
     """NumPy mirror of :func:`envelope_at`, vectorized over a time array
-    (host-side plotting / property tests / legacy callers)."""
-    t = np.asarray(t, np.float64)[..., None]  # (..., 1) vs (C,) components
+    (host-side plotting / property tests / legacy callers).
+
+    All per-component arithmetic runs in float32 so slot indices and
+    telegraph bins match the traced path *bit-for-bit*, including at
+    large ``t`` where a float64 quotient would floor into a different
+    slot than the simulator's float32 one.
+    """
+    t = np.asarray(t, np.float32)[..., None]  # (..., 1) vs (C,) components
+    env = np.asarray(env, np.float32)
     kind = env[:, 0].astype(np.int64)
     p0, p1, w, seed = env[:, 1], env[:, 2], env[:, 3], env[:, 4]
-    period = np.maximum(p0 + p1, 1e-12)
-    slot_len = np.maximum(p0, 1e-12)
-    on_bursty = ((t % period) < p0).astype(np.float64)
-    on_ramp = np.clip(t / slot_len, 0.0, 1.0)
+    period = np.maximum(p0 + p1, np.float32(1e-12))
+    slot_len = np.maximum(p0, np.float32(1e-12))
+    on_bursty = ((t % period) < p0).astype(np.float32)
+    on_ramp = np.clip(t / slot_len, np.float32(0), np.float32(1))
     # mod before the cast: off/steady rows leave slot_len at its 1e-12
     # floor, whose huge quotient would otherwise overflow the uint32 cast
     # (the selected value ignores those rows either way)
-    slot = np.mod(np.floor(t / slot_len), 2.0 ** 32).astype(np.uint32)
+    slot = np.mod(np.floor(t / slot_len),
+                  np.float32(2.0 ** 32)).astype(np.uint32)
     seed_u = np.broadcast_to(seed.astype(np.uint32), slot.shape)
     h_hi, _ = splitmix64_hilo(seed_u, slot)
-    u = ((h_hi >> np.uint32(8)) & np.uint32(0xFFFFFF)).astype(np.float64) \
-        / float(0x1000000)
-    on_random = (u < p0 / period).astype(np.float64)
+    u = ((h_hi >> np.uint32(8)) & np.uint32(0xFFFFFF)).astype(np.float32) \
+        / np.float32(0x1000000)
+    on_random = (u < p0 / period).astype(np.float32)
     val = np.select(
         [kind == ENV_STEADY, kind == ENV_BURSTY, kind == ENV_RAMP,
          kind == ENV_RANDOM],
-        [np.ones_like(on_ramp), on_bursty, on_ramp, on_random], 0.0)
-    return np.clip((w * val).sum(-1), 0.0, 1.0)
+        [np.ones_like(on_ramp), on_bursty, on_ramp, on_random],
+        np.float32(0))
+    return np.clip((w * val).sum(-1, dtype=np.float32),
+                   np.float32(0), np.float32(1))
+
+
+# --------------------------------------------------------------------------
+# Per-link fault envelopes (flapping links, dying optics; DESIGN.md §16)
+# --------------------------------------------------------------------------
+#
+# Where the aggressor envelope above modulates *injection*, a fault table
+# modulates per-link *capacity*: a fixed-size table of event rows
+# ``[kind, t_start, duration, severity, link_group, seed]`` lowered to a
+# multiplicative scale on ``caps_finite`` inside the jitted step. Rows
+# target structural link groups (see the GROUP_* ids, stamped onto
+# ``FabricGeometry.link_group`` by ``make_geometry``), so one table
+# expresses "the hottest link flaps" or "every optic in the fabric ages"
+# without touching geometry shapes. An all-``none`` table lowers to an
+# exact scale of 1.0 — multiplying by it is bit-identical to the
+# no-fault engine (the inertness contract the tests pin).
+
+FAULT_NONE = 0     # inert row
+FAULT_OUTAGE = 1   # hard capacity drop inside [t_start, t_start+duration)
+FAULT_FLAP = 2     # random telegraph: slots down with prob `severity`
+FAULT_DEGRADE = 3  # dying optic: linear decay over `duration`, persists
+FAULT_JITTER = 4   # per-slot random capacity wobble inside the window
+
+FAULT_EVENTS = 8   # fixed event slots per table (vmap-stable shape)
+FAULT_FIELDS = 6   # [kind, t_start, duration, severity, link_group, seed]
+
+# capacity scale floor: caps_eff divides queue-delay terms, so a fault can
+# never lower a link to exactly 0 (2**-10 keeps f32 division well away
+# from inf while being ~60 dB down — an unusable but well-defined link)
+FAULT_FLOOR = 2.0 ** -10
+
+# telegraph slot length for flap/jitter events. Real optics flap on
+# second scales; the engine's iteration timescale is compressed the same
+# way the paper's 1000-iteration runs are, so slots are sized to span a
+# handful of collective iterations.
+FLAP_SLOT_S = 250e-6
+
+# structural link groups (values of FabricGeometry.link_group). Group 0
+# is reserved for the sink/padding lanes and never matches an event row.
+GROUP_NONE = 0
+GROUP_EDGE_UP = 1    # host -> leaf switch (injection edge)
+GROUP_EDGE_DOWN = 2  # leaf switch -> host (delivery edge)
+GROUP_FABRIC = 3     # switch -> switch
+GROUP_HOT = 4        # the single most-traversed link (overrides the above)
+
+_FAULT_IDS = {"none": FAULT_NONE, "outage": FAULT_OUTAGE,
+              "flap": FAULT_FLAP, "degrade": FAULT_DEGRADE,
+              "jitter": FAULT_JITTER}
+_GROUP_LABELS = {GROUP_NONE: "none", GROUP_EDGE_UP: "up",
+                 GROUP_EDGE_DOWN: "down", GROUP_FABRIC: "fab",
+                 GROUP_HOT: "hot"}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One fault-event row; ``severity`` is the fraction of capacity lost
+    (outage/degrade), the slot down-probability (flap), or the wobble
+    amplitude (jitter)."""
+
+    kind: str  # "outage" | "flap" | "degrade" | "jitter"
+    t_start: float
+    duration: float
+    severity: float
+    link_group: int = GROUP_HOT
+    seed: int = 1
+
+    def label(self) -> str:
+        g = _GROUP_LABELS.get(self.link_group, str(self.link_group))
+        return (f"{self.kind}[{g} {self.severity:g} "
+                f"@{self.t_start * 1e3:g}+{self.duration * 1e3:g}ms]")
+
+
+def outage(t_start: float, duration: float, severity: float = 1.0,
+           link_group: int = GROUP_HOT, seed: int = 1) -> FaultEvent:
+    """Hard capacity loss for the window (severity 1.0 = link down)."""
+    return FaultEvent("outage", t_start, duration, severity, link_group, seed)
+
+
+def flap(t_start: float, duration: float, duty: float = 0.3,
+         link_group: int = GROUP_HOT, seed: int = 1) -> FaultEvent:
+    """Flapping link: FLAP_SLOT_S slots inside the window go down
+    (to FAULT_FLOOR) with probability ``duty`` via the counter PRNG."""
+    return FaultEvent("flap", t_start, duration, duty, link_group, seed)
+
+
+def degrade(t_start: float, duration: float, severity: float = 0.8,
+            link_group: int = GROUP_HOT, seed: int = 1) -> FaultEvent:
+    """Dying optic: capacity decays linearly to ``1 - severity`` over
+    ``duration`` and *stays* degraded afterwards."""
+    return FaultEvent("degrade", t_start, duration, severity,
+                      link_group, seed)
+
+
+def jitter(t_start: float, duration: float, severity: float = 0.5,
+           link_group: int = GROUP_FABRIC, seed: int = 1) -> FaultEvent:
+    """Per-slot uniform capacity wobble in [1-severity, 1] (marginal
+    links / thermal throttling) inside the window."""
+    return FaultEvent("jitter", t_start, duration, severity,
+                      link_group, seed)
+
+
+def fault_table(events=()) -> np.ndarray:
+    """Lower events to the fixed (FAULT_EVENTS, FAULT_FIELDS) table the
+    step consumes; unused rows are ``none`` (scale 1)."""
+    events = tuple(events)
+    if len(events) > FAULT_EVENTS:
+        raise ValueError(
+            f"{len(events)} fault events exceed {FAULT_EVENTS} slots")
+    rows = np.zeros((FAULT_EVENTS, FAULT_FIELDS), np.float32)
+    for i, e in enumerate(events):
+        rows[i] = (_FAULT_IDS[e.kind], e.t_start, e.duration, e.severity,
+                   e.link_group, e.seed)
+    return rows
+
+
+def no_fault_table() -> np.ndarray:
+    """The all-``none`` table: multiplying caps by its scale (exactly 1.0)
+    is bit-identical to running without a table. Grids force it onto
+    lanes without faults so every lane shares one pytree structure."""
+    return fault_table(())
+
+
+def fault_scale_at(fault, link_group, t):
+    """Traceable per-link capacity scale at sim time ``t``.
+
+    ``fault`` is a (FAULT_EVENTS, FAULT_FIELDS) float array and
+    ``link_group`` the geometry's (L+1,) group ids; returns an (L+1,)
+    float32 scale in [FAULT_FLOOR, 1]. Rows multiply, so overlapping
+    events compound. Evaluated in the jitted step *outside* the kernel
+    launch — the scaled caps ride in as a plain operand.
+    """
+    import jax.numpy as jnp
+
+    kind = fault[:, 0].astype(jnp.int32)
+    t0, dur, sev = fault[:, 1], fault[:, 2], fault[:, 3]
+    grp = fault[:, 4].astype(jnp.int32)
+    seed = fault[:, 5]
+    rel = t - t0
+    in_win = (rel >= 0.0) & (rel < dur)
+    # telegraph slot hash, shared by flap and jitter. Same mod-before-cast
+    # guard as envelope_at, plus a clamp to rel >= 0: a negative quotient
+    # mod 2**32 can *round up to exactly 2**32* in f32 (2**32 - small is
+    # not representable), recreating the out-of-range cast
+    slot = jnp.mod(jnp.floor(jnp.maximum(rel, 0.0)
+                             / jnp.float32(FLAP_SLOT_S)),
+                   2.0 ** 32).astype(jnp.uint32)
+    h_hi, _ = splitmix64_hilo(seed.astype(jnp.uint32), slot, xp=jnp)
+    u = ((h_hi >> jnp.uint32(8)) & jnp.uint32(0xFFFFFF)) \
+        .astype(jnp.float32) / jnp.float32(0x1000000)
+    s_outage = jnp.where(in_win, 1.0 - sev, 1.0)
+    s_flap = jnp.where(in_win & (u < sev), 0.0, 1.0)
+    s_degrade = jnp.where(
+        rel >= 0.0,
+        1.0 - sev * jnp.clip(rel / jnp.maximum(dur, 1e-9), 0.0, 1.0), 1.0)
+    s_jitter = jnp.where(in_win, 1.0 - sev * u, 1.0)
+    s = jnp.select(
+        [kind == FAULT_OUTAGE, kind == FAULT_FLAP, kind == FAULT_DEGRADE,
+         kind == FAULT_JITTER],
+        [s_outage, s_flap, s_degrade, s_jitter], jnp.ones_like(sev))
+    s = jnp.maximum(s, jnp.float32(FAULT_FLOOR))
+    lg = link_group.astype(jnp.int32)
+    match = (grp[:, None] == lg[None, :]) & (kind[:, None] != FAULT_NONE) \
+        & (lg[None, :] != GROUP_NONE)
+    return jnp.prod(jnp.where(match, s[:, None], jnp.float32(1.0)), axis=0)
+
+
+def fault_scale_np(fault: np.ndarray, link_group: np.ndarray,
+                   t: float) -> np.ndarray:
+    """NumPy mirror of :func:`fault_scale_at` at one scalar time (float32
+    arithmetic throughout, bit-matching the traced path)."""
+    fault = np.asarray(fault, np.float32)
+    link_group = np.asarray(link_group, np.int32)
+    kind = fault[:, 0].astype(np.int32)
+    t0, dur, sev = fault[:, 1], fault[:, 2], fault[:, 3]
+    grp = fault[:, 4].astype(np.int32)
+    rel = np.float32(t) - t0
+    in_win = (rel >= 0) & (rel < dur)
+    slot = np.mod(np.floor(np.maximum(rel, np.float32(0))
+                           / np.float32(FLAP_SLOT_S)),
+                  np.float32(2.0 ** 32)).astype(np.uint32)
+    h_hi, _ = splitmix64_hilo(fault[:, 5].astype(np.uint32), slot)
+    u = ((h_hi >> np.uint32(8)) & np.uint32(0xFFFFFF)).astype(np.float32) \
+        / np.float32(0x1000000)
+    one = np.float32(1)
+    s_outage = np.where(in_win, one - sev, one)
+    s_flap = np.where(in_win & (u < sev), np.float32(0), one)
+    s_degrade = np.where(
+        rel >= 0,
+        one - sev * np.clip(rel / np.maximum(dur, np.float32(1e-9)),
+                            np.float32(0), one), one)
+    s_jitter = np.where(in_win, one - sev * u, one)
+    s = np.select([kind == FAULT_OUTAGE, kind == FAULT_FLAP,
+                   kind == FAULT_DEGRADE, kind == FAULT_JITTER],
+                  [s_outage, s_flap, s_degrade, s_jitter], one)
+    s = np.maximum(s, np.float32(FAULT_FLOOR)).astype(np.float32)
+    match = (grp[:, None] == link_group[None, :]) \
+        & (kind[:, None] != FAULT_NONE) & (link_group[None, :] != GROUP_NONE)
+    return np.prod(np.where(match, s[:, None], one),
+                   axis=0, dtype=np.float32)
 
 
 # --------------------------------------------------------------------------
@@ -114,10 +327,24 @@ class Profile:
     pause_s: float = 0.0
     seed: int = 0
     components: Tuple[Tuple["Profile", float], ...] = ()
+    # link-fault events riding on this lane (lowered separately via
+    # fault_params — they scale link capacity, not aggressor injection)
+    faults: Tuple[FaultEvent, ...] = ()
+    # intra-node stage capacity as a fraction of the NIC rate; 0 = stage
+    # inert (node_cap lowers to +inf)
+    node_cap_frac: float = 0.0
 
     def params(self) -> np.ndarray:
         rows = np.zeros((ENV_COMPONENTS, 5), np.float32)
-        comps = self.components if self.kind == "mix" else ((self, 1.0),)
+        if self.kind == "mix":
+            if not self.components:
+                raise ValueError(
+                    "mix profile with zero components would silently "
+                    "lower to an all-off table; use no_congestion() for "
+                    "an intentionally idle aggressor")
+            comps = self.components
+        else:
+            comps = ((self, 1.0),)
         if len(comps) > ENV_COMPONENTS:
             raise ValueError(
                 f"mix of {len(comps)} components exceeds {ENV_COMPONENTS}")
@@ -128,23 +355,51 @@ class Profile:
                        w, prof.seed)
         return rows
 
+    def fault_params(self):
+        """(FAULT_EVENTS, FAULT_FIELDS) table, or None when the profile
+        carries no fault events (keeps the legacy no-fault trace)."""
+        return fault_table(self.faults) if self.faults else None
+
     def envelope(self, t0: float, n: int, dt: float) -> np.ndarray:
         """Sampled envelope values (host side; legacy array interface)."""
         t = t0 + np.arange(n) * dt
         return envelope_np(self.params(), t).astype(np.float32)
 
-    def label(self) -> str:
+    def _base_label(self) -> str:
         if self.kind in ("off", "steady"):
             return self.kind
         if self.kind == "bursty":
-            return f"bursty {self.burst_s * 1e3:g}/{self.pause_s * 1e3:g}ms"
+            base = f"bursty {self.burst_s * 1e3:g}/{self.pause_s * 1e3:g}ms"
+            # degenerate duty cycles render honestly: burst 0 is off,
+            # pause 0 is steady-on, not a plausible-looking square wave
+            if self.burst_s <= 0:
+                base += "(=off)"
+            elif self.pause_s <= 0:
+                base += "(=on)"
+            return base
         if self.kind == "ramp":
-            return f"ramp {self.burst_s * 1e3:g}ms"
+            base = f"ramp {self.burst_s * 1e3:g}ms"
+            return base + ("(=step)" if self.burst_s <= 0 else "")
         if self.kind == "random":
-            return (f"random {self.burst_s * 1e3:g}/"
+            base = (f"random {self.burst_s * 1e3:g}/"
                     f"{self.pause_s * 1e3:g}ms s{self.seed}")
+            if self.burst_s <= 0:
+                base += "(=off)"
+            elif self.pause_s <= 0:
+                base += "(=on)"
+            return base
         parts = ", ".join(f"{w:g}*{p.label()}" for p, w in self.components)
+        if self.components and not any(w for _, w in self.components):
+            return f"mix({parts})(=off)"
         return f"mix({parts})"
+
+    def label(self) -> str:
+        out = self._base_label()
+        if self.faults:
+            out += "+" + ",".join(e.label() for e in self.faults)
+        if self.node_cap_frac > 0:
+            out += f"+node{self.node_cap_frac:g}x"
+        return out
 
 
 def steady() -> Profile:
@@ -173,3 +428,22 @@ def multi_tenant(*weighted: Tuple[Profile, float]) -> Profile:
     """Weighted blend of tenant envelopes (e.g. three bursty tenants with
     different periods and phases sharing the aggressor nodes)."""
     return Profile("mix", components=tuple(weighted))
+
+
+def with_faults(profile: Profile, *events: FaultEvent) -> Profile:
+    """The profile with link-fault events appended to its lane."""
+    return dataclasses.replace(profile,
+                               faults=tuple(profile.faults) + tuple(events))
+
+
+def with_node_cap(profile: Profile, frac: float) -> Profile:
+    """The profile with the intra-node stage armed at ``frac`` x the NIC
+    rate (NVLink/PCIe contention ahead of the NIC; DESIGN.md §16)."""
+    return dataclasses.replace(profile, node_cap_frac=float(frac))
+
+
+def needs_fault_table(profiles) -> bool:
+    """True when any lane of a grid carries fault events — then *every*
+    lane must carry a table (the inert one if need be) so stacked
+    SimParams share one pytree structure."""
+    return any(p.faults for p in profiles)

@@ -56,7 +56,9 @@ from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
                                        POLICY_FIXED, POLICY_FLOWLET,
                                        POLICY_NSLB)
 from repro.core.fabric.topology import Topology
-from repro.core.envelopes import ENV_COMPONENTS, envelope_at, no_congestion
+from repro.core.envelopes import (ENV_COMPONENTS, GROUP_EDGE_DOWN,
+                                  GROUP_EDGE_UP, GROUP_FABRIC, GROUP_HOT,
+                                  envelope_at, fault_scale_at, no_congestion)
 from repro.core.traffic import pad_rows
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
@@ -243,8 +245,9 @@ def pack_paths(paths_per_flow: List[List[List[int]]], sink: int, k_max: int = 4)
          data_fields=["caps_pad", "caps_finite", "dst_sw", "src_sw", "paths",
                       "n_paths", "spray_choice", "path_len", "is_victim",
                       "fixed_choice", "ecmp_choice", "nslb_choice", "src_id",
-                      "flow_job", "flow_phase", "n_phases", "phase_gap"],
-         meta_fields=["L", "n_sw", "n_src", "n_jobs"])
+                      "flow_job", "flow_phase", "n_phases", "phase_gap",
+                      "link_group"],
+         meta_fields=["L", "n_sw", "n_src", "n_jobs", "intra_node"])
 @dataclasses.dataclass(frozen=True)
 class FabricGeometry:
     """Everything structural: link capacities, switch adjacency, packed
@@ -274,18 +277,24 @@ class FabricGeometry:
     flow_phase: jnp.ndarray  # (F,) phase membership per flow
     n_phases: jnp.ndarray  # (J,) program length per job
     phase_gap: jnp.ndarray  # (J, P) compute gap after each phase
+    # structural fault-targeting groups per link (envelopes.GROUP_*);
+    # 0 on the sink and padding so event rows can never touch them
+    link_group: jnp.ndarray  # (L+1,) int32
     L: int
     n_sw: int
     n_src: int
     n_jobs: int
+    # static flag arming the intra-node (NVLink/PCIe) stage ahead of the
+    # NIC limit; 0 keeps the legacy trace free of the extra scatter
+    intra_node: int = 0
 
     @property
     def n_flows(self) -> int:
         return self.is_victim.shape[0]
 
 
-def make_geometry(topo: Topology, flows: FlowSet,
-                  prune: bool = True) -> FabricGeometry:
+def make_geometry(topo: Topology, flows: FlowSet, prune: bool = True,
+                  intra_node: bool = False) -> FabricGeometry:
     """Bind a flow set to a topology.
 
     ``prune=True`` (default) restricts the per-link state arrays to the
@@ -321,6 +330,23 @@ def make_geometry(topo: Topology, flows: FlowSet,
         if not (isinstance(a, tuple) and a[0] == "h"):
             src_sw[li] = 1 + sw_ids.setdefault(a, len(sw_ids))
     n_sw = len(sw_ids) + 2  # 0 == "no switch" (host endpoints)
+    # structural fault-targeting groups: edge-up / edge-down / fabric from
+    # the endpoint kinds, then the single most-path-traversed link is
+    # promoted to GROUP_HOT ("the flapping link" / "the dying optic" —
+    # deterministic, so fault scenarios target it without naming ids).
+    # The sink (index L) stays GROUP_NONE and is untouchable by events.
+    link_group = np.zeros(L + 1, np.int32)
+    for li, gi in enumerate(used):
+        a, b = topo.link_names[int(gi)]
+        if isinstance(a, tuple) and a[0] == "h":
+            link_group[li] = GROUP_EDGE_UP
+        elif isinstance(b, tuple) and b[0] == "h":
+            link_group[li] = GROUP_EDGE_DOWN
+        else:
+            link_group[li] = GROUP_FABRIC
+    traversals = np.bincount(paths_np[paths_np < L].ravel(), minlength=L)
+    if traversals.size and traversals.max() > 0:
+        link_group[int(np.argmax(traversals))] = GROUP_HOT
     # source (NIC) ids densified the same way
     src_raw = np.asarray(flows.src_id, np.int64)
     if prune and len(src_raw):
@@ -349,7 +375,9 @@ def make_geometry(topo: Topology, flows: FlowSet,
         flow_phase=jnp.asarray(flows.flow_phase, jnp.int32),
         n_phases=jnp.asarray(flows.n_phases, jnp.int32),
         phase_gap=jnp.asarray(flows.phase_gap, jnp.float32),
-        L=L, n_sw=n_sw, n_src=n_src, n_jobs=flows.n_jobs)
+        link_group=jnp.asarray(link_group),
+        L=L, n_sw=n_sw, n_src=n_src, n_jobs=flows.n_jobs,
+        intra_node=int(bool(intra_node)))
 
 
 # --------------------------------------------------------------------------
@@ -372,6 +400,9 @@ class GeometryDims:
     n_src: int
     n_jobs: int
     n_phases: int
+    # 0/1 flag, not a size: never rounded up by the bucket policy (a
+    # pow2 round would turn 0 into 1 and arm the stage for every bucket)
+    intra_node: int = 0
 
 
 def geometry_dims(geom: FabricGeometry) -> GeometryDims:
@@ -379,19 +410,28 @@ def geometry_dims(geom: FabricGeometry) -> GeometryDims:
         n_links=geom.L, n_flows=geom.n_flows,
         k_max=int(geom.paths.shape[1]), max_hops=int(geom.paths.shape[2]),
         n_sw=geom.n_sw, n_src=geom.n_src, n_jobs=geom.n_jobs,
-        n_phases=int(geom.phase_gap.shape[1]))
+        n_phases=int(geom.phase_gap.shape[1]),
+        intra_node=int(geom.intra_node))
+
+
+_DIM_FLAG_FIELDS = ("intra_node",)
 
 
 def bucket_dims(geoms: Sequence[FabricGeometry],
                 round_up=None) -> GeometryDims:
     """Elementwise max over member dims, optionally rounded up (the
     bucket-size policy — bench rounds to powers of two so different cell
-    sets resolve to the same bucket shape and reuse compiles)."""
+    sets resolve to the same bucket shape and reuse compiles). Flag
+    fields max without rounding: a bucket mixing stage-on and stage-off
+    cells arms the stage, and stage-off members run it inert
+    (node_cap=inf is bit-identical — DESIGN.md §16)."""
     dims = [geometry_dims(g) for g in geoms]
     out = {}
     for f in dataclasses.fields(GeometryDims):
         v = max(getattr(d, f.name) for d in dims)
-        out[f.name] = round_up(v) if round_up is not None else v
+        if round_up is not None and f.name not in _DIM_FLAG_FIELDS:
+            v = round_up(v)
+        out[f.name] = v
     return GeometryDims(**out)
 
 
@@ -439,6 +479,9 @@ def pad_geometry(geom: FabricGeometry, dims: GeometryDims) -> FabricGeometry:
     dst_sw[:L_old] = np.asarray(geom.dst_sw)[:L_old]
     src_sw = np.zeros((L_new + 1,), np.int32)
     src_sw[:L_old] = np.asarray(geom.src_sw)[:L_old]
+    # pad links stay GROUP_NONE: no fault event can ever scale them
+    link_group = np.zeros((L_new + 1,), np.int32)
+    link_group[:L_old] = np.asarray(geom.link_group)[:L_old]
 
     n_phases = pad_rows(np.asarray(geom.n_phases), J, 1)
     phase_gap = np.zeros((J, dims.n_phases), np.float32)
@@ -461,7 +504,9 @@ def pad_geometry(geom: FabricGeometry, dims: GeometryDims) -> FabricGeometry:
         flow_job=jnp.asarray(pad_rows(np.asarray(geom.flow_job), F, J - 1)),
         flow_phase=jnp.asarray(pad_rows(np.asarray(geom.flow_phase), F, 0)),
         n_phases=jnp.asarray(n_phases), phase_gap=jnp.asarray(phase_gap),
-        L=L_new, n_sw=dims.n_sw, n_src=dims.n_src, n_jobs=J)
+        link_group=jnp.asarray(link_group),
+        L=L_new, n_sw=dims.n_sw, n_src=dims.n_src, n_jobs=J,
+        intra_node=int(dims.intra_node))
 
 
 def stack_geometries(geoms: Sequence[FabricGeometry]) -> FabricGeometry:
@@ -469,7 +514,7 @@ def stack_geometries(geoms: Sequence[FabricGeometry]) -> FabricGeometry:
     axis on every data field). All meta fields must agree; pad to a
     common :class:`GeometryDims` first. Routing policy is traced data
     (SimParams.policy), so mixed-routing cells stack freely."""
-    metas = {(g.L, g.n_sw, g.n_src, g.n_jobs) for g in geoms}
+    metas = {(g.L, g.n_sw, g.n_src, g.n_jobs, g.intra_node) for g in geoms}
     if len(metas) != 1:
         raise ValueError(f"cannot stack geometries with differing meta "
                          f"fields: {sorted(metas)}")
@@ -483,7 +528,8 @@ def stack_geometries(geoms: Sequence[FabricGeometry]) -> FabricGeometry:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["dt", "bytes_per_iter", "host_caps", "env", "policy",
-                      "flowlet_gap_s", "flow_start", "fct_mask", "kind",
+                      "flowlet_gap_s", "flow_start", "fct_mask", "fault",
+                      "node_cap", "kind",
                       "qmax_bytes", "kmin", "kmax", "md", "rai_frac",
                       "cc_interval_s", "hol_factor", "hol_start",
                       "min_rate_frac", "follow_tau_s", "follow_gain",
@@ -508,6 +554,14 @@ class SimParams:
     # Scalar 0.0 defaults reproduce legacy behavior bit-for-bit.
     flow_start: jnp.ndarray  # () or (F,) seconds
     fct_mask: jnp.ndarray  # () or (F,) 0/1 weight
+    # link-fault event table (envelopes.fault_scale_at). None keeps the
+    # legacy no-fault trace byte-identical (an absent pytree leaf); grids
+    # mixing fault and clean lanes put the inert all-``none`` table on
+    # the clean lanes so stacked params share one structure.
+    fault: Optional[jnp.ndarray]  # (FAULT_EVENTS, FAULT_FIELDS) or None
+    # intra-node stage capacity in bytes/s (scalar or (n_src,)); +inf is
+    # exactly inert, so stage-on buckets can host stage-off cells
+    node_cap: jnp.ndarray  # () or (n_src,)
     # CC scalars (cc.CCParams lowered to data; kind selects the update
     # rule — scalar per cell, or (F,) for per-flow/tenant CC mixes)
     kind: jnp.ndarray  # () or (F,) int32
@@ -531,7 +585,8 @@ def make_params(cc: CCParams, *, dt: float, bytes_per_iter: np.ndarray,
                 host_caps: np.ndarray, env: np.ndarray,
                 policy: int = POLICY_FIXED,
                 flowlet_gap_s: float = 200e-6,
-                flow_start=0.0, fct_mask=0.0) -> SimParams:
+                flow_start=0.0, fct_mask=0.0,
+                fault=None, node_cap=np.inf) -> SimParams:
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     return SimParams(
         dt=f32(dt), bytes_per_iter=f32(bytes_per_iter),
@@ -539,6 +594,8 @@ def make_params(cc: CCParams, *, dt: float, bytes_per_iter: np.ndarray,
         policy=jnp.asarray(policy, jnp.int32),
         flowlet_gap_s=f32(flowlet_gap_s),
         flow_start=f32(flow_start), fct_mask=f32(fct_mask),
+        fault=None if fault is None else f32(fault),
+        node_cap=f32(node_cap),
         kind=jnp.asarray(cc.kind, jnp.int32),
         qmax_bytes=f32(cc.qmax_bytes), kmin=f32(cc.kmin), kmax=f32(cc.kmax),
         md=f32(cc.md), rai_frac=f32(cc.rai_frac),
@@ -701,6 +758,35 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
     # it has no data dependence on routing, so applying it after the
     # path choice is bit-identical.)
 
+    # ---- link-fault engine (envelopes.fault_scale_at, DESIGN.md §16) ----
+    # Per-link capacity scale at sim time t, folded into the caps operand
+    # OUTSIDE the kernel launch so both step-core backends consume
+    # already-scaled capacities and the fused kernel body is untouched.
+    # p.fault is None on the legacy path (absent pytree leaf — the trace
+    # is byte-identical to a build without the feature); the all-``none``
+    # table lowers to an exact 1.0 scale, and caps * 1.0 is bit-exact for
+    # finite positive f32 capacities (the inertness contract the
+    # fault-table tests pin on every state leaf).
+    caps_lk = geom.caps_finite
+    if p.fault is not None:
+        caps_lk = caps_lk * fault_scale_at(p.fault, geom.link_group,
+                                           state["t"])
+
+    # ---- optional intra-node stage (NVLink/PCIe ahead of the NIC) ----
+    # Flows sharing a source node proportionally split the node's
+    # internal bandwidth BEFORE the NIC limit — the same fluid share rule
+    # the core applies per NIC, one stage earlier (Tarraga-Moreno et al.;
+    # DESIGN.md §16). The flag is geometry meta (static), so flag-off
+    # traces carry none of these ops; node_cap == +inf makes the stage an
+    # exact no-op (scale 1.0), letting stage-on buckets host stage-off
+    # cells bit-identically.
+    if geom.intra_node:
+        nload = jnp.zeros((geom.n_src,), jnp.float32) \
+            .at[geom.src_id].add(inject)
+        ncap = p.node_cap + jnp.zeros((geom.n_src,), jnp.float32)
+        nscale = jnp.minimum(1.0, ncap / jnp.maximum(nload, 1.0))
+        inject = inject * nscale[geom.src_id]
+
     # ---- routing: traced per-cell policy (lax.switch over p.policy) ----
     # Static tables (fixed / ecmp / nslb) read precomputed host-side
     # assignments; dynamic policies score candidates by queue occupancy.
@@ -765,13 +851,13 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
     if backend == "pallas":
         core = kernel_ops.fabric_step_core(
             plinks, inject, geom.src_id, p.host_caps, state["q"], occ,
-            geom.caps_finite, geom.src_sw, geom.dst_sw, dt, p.qmax_bytes,
+            caps_lk, geom.src_sw, geom.dst_sw, dt, p.qmax_bytes,
             p.hol_factor, p.hol_start, p.burst_jitter,
             n_src=geom.n_src, n_sw=geom.n_sw, with_aux=with_aux)
     else:
         core = kernel_ref.fabric_step_core(
             plinks, inject, geom.src_id, p.host_caps, state["q"], occ,
-            geom.caps_finite, geom.src_sw, geom.dst_sw, dt, p.qmax_bytes,
+            caps_lk, geom.src_sw, geom.dst_sw, dt, p.qmax_bytes,
             p.hol_factor, p.hol_start, p.burst_jitter,
             n_src=geom.n_src, n_sw=geom.n_sw, with_aux=with_aux)
     inject = core["inject"]  # NIC-scaled
@@ -845,8 +931,9 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
     # job partially drains queues
     q = jnp.where(wrap[0], q * p.iter_drain, q)
 
-    # queueing delay experienced by victim flows (seconds)
-    qdel = jnp.max(jnp.where(valid, (q / geom.caps_finite)[plinks], 0.0),
+    # queueing delay experienced by victim flows (seconds) — against the
+    # fault-scaled capacity: a drained-down link serves its queue slower
+    qdel = jnp.max(jnp.where(valid, (q / caps_lk)[plinks], 0.0),
                    axis=1)
     mean_qdel = jnp.sum(qdel * geom.is_victim) / jnp.maximum(
         jnp.sum(geom.is_victim), 1)

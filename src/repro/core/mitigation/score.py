@@ -34,6 +34,9 @@ from repro.core.mitigation.search import Candidate, CellRun, PanelCell
 
 # scenario families the default panel draws from
 PANEL_SCENARIO = "mitigation_panel"
+# the link-fault robustness panel: benchmarks/fault_scenarios.py asks
+# "which CC/routing config is robust to a flapping link" per fabric
+FAULT_PANEL_SCENARIO = "link_fault"
 
 
 def panel_from_scenario(name: str = PANEL_SCENARIO,
@@ -158,6 +161,24 @@ def pick_winner(scores: Sequence[CandidateScore],
         ok = finished
     return max(ok, key=lambda s: (round(s.ratio_min, 3),
                                   round(s.jain, 3), s.aggr_gbps))
+
+
+def winners_by_system(runs: Sequence[CellRun],
+                      baseline_slack: float = 0.02,
+                      default_label: str = "default",
+                      ) -> Dict[str, CandidateScore]:
+    """Per-fabric winners: split cell runs on the system token of the
+    panel-cell name (``<scenario>:<system>-<n>/...``, the format
+    :func:`panel_from_scenario` emits) and pick a winner per fabric.
+    The fault panels care about this split — a config that rescues a
+    flapping Slingshot link may tax a fat-tree's baseline."""
+    by_sys: Dict[str, List[CellRun]] = {}
+    for r in runs:
+        sysname = r.cell.split(":", 1)[-1].split("-", 1)[0]
+        by_sys.setdefault(sysname, []).append(r)
+    return {s: pick_winner(aggregate(rs, default_label=default_label),
+                           baseline_slack=baseline_slack)
+            for s, rs in sorted(by_sys.items())}
 
 
 def score_table(panel: Sequence[PanelCell],

@@ -222,10 +222,17 @@ def run_candidates(panel: Sequence[PanelCell],
     bench.check_iter_budget(n_iters)
     launcher = bench._resolve_launcher(mesh, launcher, shard_axis="lane")
     # policy_tables: candidates cross-select ECMP/NSLB as traced data,
-    # so every panel geometry must carry the full static tables
+    # so every panel geometry must carry the full static tables.
+    # Fault-scenario cells: one faulted cell anywhere in the panel puts
+    # the inert fault table on EVERY lane (params stack across cells),
+    # and a node-capped cell arms its case's intra-node stage (the
+    # bucket maxes the flag; stage-off cells run it inert at inf).
+    with_ft = cong.needs_fault_table([c.profile for c in panel])
     cases = [bench.build_case(c.system, c.n_nodes, c.victim, c.aggressor,
                               jobs=list(c.jobs) or None,
-                              policy_tables=True) for c in panel]
+                              policy_tables=True,
+                              intra_node=c.profile.node_cap_frac > 0)
+             for c in panel]
     dims, stacked = bench.bucket_stack([c.geom for c in cases])
     dts, rows = [], []
     for cell, case in zip(panel, cases):
@@ -236,7 +243,8 @@ def run_candidates(panel: Sequence[PanelCell],
         for cand in candidates:
             for prof in (cong.no_congestion(), cell.profile):
                 p = case.cell_params(cell.vector_bytes, prof, dt,
-                                     n_flows=dims.n_flows)
+                                     n_flows=dims.n_flows,
+                                     with_fault_table=with_ft)
                 lane.append(cand.apply(p, case.policy))
         rows.append(sim.stack_params(lane))
     params = sim.stack_params(rows)

@@ -464,6 +464,13 @@ def mitigation_panel(quick: bool = False) -> Scenario:
             Grid("leonardo", 32, "training_vs_incast", (2 * MiB,),
                  (cong.steady(),), victim="ring_allreduce",
                  jobs=_mix_jobs("training_vs_incast")),
+            # flapping hot link UNDER live incast congestion: the search
+            # must find a config robust to the compound failure (the
+            # link_fault family carries the fault-only panel)
+            Grid("leonardo", 32, "incast", (2 * MiB,),
+                 (cong.with_faults(cong.steady(),
+                                   cong.flap(0.2e-3, 20e-3, duty=0.3,
+                                             seed=5)),)),
         ]
     return Scenario(
         "mitigation_panel",
@@ -493,6 +500,81 @@ def mitigation_routing(quick: bool = False) -> Scenario:
         "Mixed-routing shootout (leaf-spine ECMP/NSLB, fat-tree and "
         "Dragonfly+ AR) — one scale-batched compile across routing "
         "modes.",
+        grids, n_iters=12, warmup=3)
+
+
+# --------------------------------------------------------------------------
+# Fault-scenario families (link faults + intra-node stage; DESIGN.md §16)
+# --------------------------------------------------------------------------
+
+
+@register
+def link_fault(quick: bool = False) -> Scenario:
+    """Link failure & degradation events as time-varying per-link
+    capacity envelopes (ROADMAP item 4a): a flapping hot link, a dying
+    optic (linear decay that persists), fabric-wide jitter — each alone
+    on an otherwise clean fabric, plus a flap compounding with live
+    incast congestion. Scale-batched so the whole family is one compile
+    per geometry bucket; the mitigation lab draws its flapping-link
+    panel from here (score.panel_from_scenario)."""
+    hot_flap = cong.with_faults(
+        cong.no_congestion(), cong.flap(0.2e-3, 20e-3, duty=0.3, seed=5))
+    dying_optic = cong.with_faults(
+        cong.no_congestion(), cong.degrade(0.2e-3, 1.5e-3, severity=0.7))
+    fabric_jitter = cong.with_faults(
+        cong.no_congestion(),
+        cong.jitter(0.2e-3, 20e-3, severity=0.6,
+                    link_group=cong.GROUP_FABRIC, seed=9))
+    flap_under_incast = cong.with_faults(
+        cong.steady(), cong.flap(0.2e-3, 20e-3, duty=0.3, seed=5))
+    if quick:
+        cells = (("leonardo", 16), ("lumi", 16))
+        clean_profiles = (hot_flap, dying_optic)
+        sizes: Tuple[float, ...] = (2 * MiB,)
+    else:
+        cells = (("leonardo", 16), ("leonardo", 64), ("lumi", 16),
+                 ("lumi", 64), ("cresco8", 16))
+        clean_profiles = (hot_flap, dying_optic, fabric_jitter,
+                          cong.with_faults(
+                              cong.no_congestion(),
+                              cong.outage(0.5e-3, 2e-3, severity=1.0)))
+        sizes = (256 * KiB, 2 * MiB)
+    grids = (
+        # no aggressor: every flow is the victim's, so GROUP_HOT is the
+        # victim's own most-traversed link — the fault does the damage
+        Grid("fault", 0, "", sizes, clean_profiles, cells=cells),
+        # compound case: the hot link flaps while incast runs
+        Grid("fault", 0, "incast", sizes, (flap_under_incast,),
+             cells=cells[:2] if quick else cells),
+    )
+    return Scenario(
+        "link_fault",
+        "Flapping hot link, dying optic, fabric jitter and hard outage "
+        "as per-link capacity envelopes, alone and compounding incast.",
+        grids, n_iters=12, warmup=3)
+
+
+@register
+def intra_node(quick: bool = False) -> Scenario:
+    """Intra-node stage contention (ROADMAP item 4b, per Tarraga-Moreno
+    et al.): NVLink/PCIe modeled as a proportional-share stage ahead of
+    the NIC, armed by the geometry flag and swept over the node-capacity
+    fraction. AlltoAll victims put many concurrent flows on each node,
+    so the stage — not the fabric — becomes the bottleneck as the
+    fraction drops; ratio tracks the fraction once it binds."""
+    fracs = (1.0, 0.5, 0.25) if quick else (2.0, 1.0, 0.5, 0.25)
+    profiles = tuple(cong.with_node_cap(cong.no_congestion(), f)
+                     for f in fracs)
+    cells = (("leonardo", 16), ("lumi", 16)) if quick else \
+        (("leonardo", 16), ("leonardo", 32), ("lumi", 16), ("lumi", 32),
+         ("cresco8", 16))
+    sizes = (1 * MiB,) if quick else (256 * KiB, 1 * MiB)
+    grids = (Grid("intra", 0, "", sizes, profiles, victim="alltoall",
+                  cells=cells),)
+    return Scenario(
+        "intra_node",
+        "Intra-node (NVLink/PCIe) stage contention: AlltoAll victims vs "
+        "a swept per-node capacity fraction ahead of the NIC.",
         grids, n_iters=12, warmup=3)
 
 

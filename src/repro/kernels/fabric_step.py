@@ -182,7 +182,13 @@ def fabric_step_core(plinks, inject, src_id, host_caps, q, occ, caps_finite,
     oracle); ``interpret=True`` runs the kernel through the Pallas
     interpreter (the only mode available off-TPU). Vmappable — the
     batched engine entries (``run_cells``/``run_cells_hetero``) vmap this
-    along with the rest of the step."""
+    along with the rest of the step.
+
+    ``caps_finite`` may arrive already scaled by the link-fault engine
+    (envelopes.fault_scale_at, DESIGN.md §16): the simulator folds the
+    time-varying per-link fault scale into this operand OUTSIDE the
+    launch, so fault scenarios ride through the kernel as plain data and
+    the body stays byte-identical to the fault-free build."""
     F, H = plinks.shape
     Lp1 = q.shape[0]
     sink = Lp1 - 1

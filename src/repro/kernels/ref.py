@@ -84,8 +84,12 @@ def fabric_step_core(plinks, inject, src_id, host_caps, q, occ, caps_finite,
     Args are per-cell (unbatched); the caller vmaps. ``plinks`` is the
     chosen path's link ids (F, H) with pad == sink == ``q.shape[0] - 1``;
     ``occ`` must equal ``q / qmax_bytes`` (computed once by the caller —
-    the routing score shares it). Returns a dict with ``inject`` (NIC-
-    scaled), ``achieved``, ``arrival``, ``q_new``, ``caps_eff``, and
+    the routing score shares it). ``caps_finite`` is whatever per-link
+    capacity the caller hands in: since the link-fault engine
+    (DESIGN.md §16) it may arrive already fault-scaled — the scale is
+    folded in OUTSIDE this core, so the body needs (and has) no notion
+    of faults. Returns a dict with ``inject`` (NIC-scaled),
+    ``achieved``, ``arrival``, ``q_new``, ``caps_eff``, and
     ``served_stage_max`` (None unless ``with_aux``).
     """
     sink = q.shape[0] - 1

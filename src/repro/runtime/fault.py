@@ -64,6 +64,26 @@ class StepMonitor:
     def tripped(self) -> bool:
         return self.consecutive >= self.trip_after
 
+    def reset(self, rebaseline: bool = True, window: int = 5):
+        """Clear the tripped state after a coordinator action (elastic
+        rescale, node swap).
+
+        Flagged steps never feed the EMA (a straggler must not poison the
+        baseline), so after a rescale to a *legitimately* slower steady
+        state every step keeps flagging against the stale pre-rescale
+        baseline and the monitor stays tripped forever. ``rebaseline``
+        re-seeds the EMA from the mean of the last ``window`` recorded
+        steps — the new steady state; ``rebaseline=False`` cold-starts
+        the baseline like a fresh monitor.
+        """
+        self.consecutive = 0
+        self._t0 = None
+        if not rebaseline:
+            self.ema_s = None
+        elif self.history:
+            recent = [st.duration_s for st in self.history[-window:]]
+            self.ema_s = float(sum(recent) / len(recent))
+
 
 class FailureInjector:
     """Deterministic failure schedule for tests: fail at given steps."""
@@ -107,9 +127,12 @@ class RestartPolicy:
         self.restarts = 0
 
     def should_restart(self) -> bool:
-        self.restarts += 1
-        if self.restarts > self.max_restarts:
+        # check before mutating: a denied call must not burn budget, so
+        # probing the policy after exhaustion stays False forever instead
+        # of sliding restarts past max_restarts
+        if self.restarts >= self.max_restarts:
             return False
+        self.restarts += 1
         if self.backoff_s:
             time.sleep(self.backoff_s * min(self.restarts, 5))
         return True

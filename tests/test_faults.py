@@ -1,0 +1,314 @@
+"""Link-fault engine contracts (DESIGN.md §16): the numpy envelope and
+fault-scale mirrors must match the traced path bit-for-bit (including
+the degenerate rows and large-``t`` regimes behind the uint32-cast
+guard), an inert fault table / inf-capacity intra-node stage must be
+bit-identical to the fault-free engine on every state leaf across both
+step-core backends and all routing policies, and the new scenario
+families must keep the one-compile-per-bucket property."""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import congestion as cong  # noqa: E402
+from repro.core import envelopes as env_lib  # noqa: E402
+from repro.core import scenarios as scen  # noqa: E402
+from repro.core.fabric import cc as cc_lib  # noqa: E402
+from repro.core.fabric import simulator as sim  # noqa: E402
+from repro.core.fabric import topology as topo_lib  # noqa: E402
+
+# time grid: slot boundaries, mid-window, far past every window, and the
+# large-t regime where f64 quotients floor into different slots than f32
+TIMES = [0.0, 1e-7, 5e-4, 2.5e-3, 1.01e-2, 0.25, 123.456, 1e4, 2.0 ** 24]
+
+
+# --------------------------------------------------------------------------
+# envelope_np == envelope_at, bin for bin (satellite of the uint32 guard)
+# --------------------------------------------------------------------------
+
+def _one_row(kind, p0, p1, w=1.0, seed=3):
+    rows = np.zeros((env_lib.ENV_COMPONENTS, 5), np.float32)
+    rows[0] = (kind, p0, p1, w, seed)
+    return rows
+
+
+ENV_ROWS = [
+    ("off", _one_row(env_lib.ENV_OFF, 0.0, 0.0)),
+    ("steady", _one_row(env_lib.ENV_STEADY, 0.0, 0.0)),
+    ("bursty", _one_row(env_lib.ENV_BURSTY, 2e-3, 8e-3)),
+    ("bursty_p0_0", _one_row(env_lib.ENV_BURSTY, 0.0, 8e-3)),
+    ("bursty_p1_0", _one_row(env_lib.ENV_BURSTY, 2e-3, 0.0)),
+    ("bursty_both_0", _one_row(env_lib.ENV_BURSTY, 0.0, 0.0)),
+    ("ramp", _one_row(env_lib.ENV_RAMP, 5e-3, 0.0)),
+    ("ramp_0", _one_row(env_lib.ENV_RAMP, 0.0, 0.0)),
+    ("random", _one_row(env_lib.ENV_RANDOM, 2e-3, 6e-3)),
+    ("random_p0_0", _one_row(env_lib.ENV_RANDOM, 0.0, 6e-3)),
+    ("random_p1_0", _one_row(env_lib.ENV_RANDOM, 2e-3, 0.0)),
+    ("random_w0", _one_row(env_lib.ENV_RANDOM, 2e-3, 6e-3, w=0.0)),
+]
+
+
+@pytest.mark.parametrize("name,rows", ENV_ROWS, ids=[n for n, _ in ENV_ROWS])
+def test_envelope_np_matches_traced_bin_for_bin(name, rows):
+    """Single-component tables: the numpy mirror and the traced envelope
+    must agree EXACTLY at every time, including the off/steady rows whose
+    slot quotient only stays castable thanks to the mod-2**32 guard and
+    the large-t points where f64 host math would pick different bins."""
+    at = jax.jit(env_lib.envelope_at)
+    got_np = env_lib.envelope_np(rows, np.asarray(TIMES, np.float32))
+    for t, v_np in zip(TIMES, got_np):
+        v_tr = float(at(jnp.asarray(rows), jnp.float32(t)))
+        assert v_tr == float(v_np), (name, t, v_tr, float(v_np))
+        assert 0.0 <= v_tr <= 1.0
+
+
+def test_envelope_mix_matches_traced():
+    prof = cong.multi_tenant((cong.bursty(2e-3, 8e-3), 0.5),
+                             (cong.random_onoff(1e-3, 3e-3, seed=7), 0.3),
+                             (cong.steady(), 0.0))
+    rows = prof.params()
+    at = jax.jit(env_lib.envelope_at)
+    got_np = env_lib.envelope_np(rows, np.asarray(TIMES, np.float32))
+    for t, v_np in zip(TIMES, got_np):
+        # multi-component sums may reduce in a different order under XLA
+        assert float(at(jnp.asarray(rows), jnp.float32(t))) \
+            == pytest.approx(float(v_np), abs=1e-6)
+
+
+# --------------------------------------------------------------------------
+# fault_scale_np == fault_scale_at, and the per-kind semantics
+# --------------------------------------------------------------------------
+
+GROUPS = np.asarray([env_lib.GROUP_NONE, env_lib.GROUP_EDGE_UP,
+                     env_lib.GROUP_EDGE_DOWN, env_lib.GROUP_FABRIC,
+                     env_lib.GROUP_HOT], np.int32)
+
+
+def test_fault_scale_np_matches_traced():
+    table = cong.fault_table([
+        cong.outage(1e-3, 2e-3, 1.0, link_group=env_lib.GROUP_EDGE_UP),
+        cong.flap(0.5e-3, 20e-3, duty=0.4, seed=5),
+        cong.degrade(0.2e-3, 1.5e-3, severity=0.7,
+                     link_group=env_lib.GROUP_FABRIC),
+        cong.jitter(2e-3, 30e-3, severity=0.6,
+                    link_group=env_lib.GROUP_EDGE_DOWN, seed=9),
+    ])
+    at = jax.jit(env_lib.fault_scale_at)
+    for t in TIMES:
+        v_np = env_lib.fault_scale_np(table, GROUPS, t)
+        v_tr = np.asarray(at(jnp.asarray(table), jnp.asarray(GROUPS),
+                             jnp.float32(t)))
+        np.testing.assert_array_equal(v_tr, v_np, err_msg=str(t))
+        # group 0 (sink/padding) is untouchable by construction
+        assert v_tr[0] == 1.0
+        assert np.all(v_tr >= env_lib.FAULT_FLOOR) and np.all(v_tr <= 1.0)
+
+
+def _scale(events, group, t):
+    return float(env_lib.fault_scale_np(
+        cong.fault_table(events), np.asarray([group], np.int32), t)[0])
+
+
+def test_outage_window_semantics():
+    ev = cong.outage(1e-3, 2e-3, 0.75, link_group=env_lib.GROUP_HOT)
+    assert _scale([ev], env_lib.GROUP_HOT, 0.5e-3) == 1.0  # before
+    assert _scale([ev], env_lib.GROUP_HOT, 2e-3) == pytest.approx(0.25)
+    assert _scale([ev], env_lib.GROUP_HOT, 4e-3) == 1.0  # after
+    assert _scale([ev], env_lib.GROUP_FABRIC, 2e-3) == 1.0  # other group
+    # severity 1.0 hits the floor, never exactly 0 (caps is a divisor)
+    hard = cong.outage(1e-3, 2e-3, 1.0)
+    assert _scale([hard], env_lib.GROUP_HOT, 2e-3) == env_lib.FAULT_FLOOR
+
+
+def test_degrade_persists_after_window():
+    ev = cong.degrade(1e-3, 4e-3, severity=0.6)
+    assert _scale([ev], env_lib.GROUP_HOT, 0.5e-3) == 1.0
+    assert _scale([ev], env_lib.GROUP_HOT, 3e-3) == pytest.approx(0.7)
+    # the optic does not heal: still at 1 - severity long after
+    assert _scale([ev], env_lib.GROUP_HOT, 1.0) == pytest.approx(0.4)
+
+
+def test_flap_duty_and_binary_levels():
+    ev = cong.flap(0.0, 10.0, duty=0.3, seed=11)
+    slots = np.arange(4000)
+    vals = np.asarray([
+        _scale([ev], env_lib.GROUP_HOT,
+               (s + 0.5) * env_lib.FLAP_SLOT_S) for s in slots])
+    assert set(np.unique(vals)) <= {np.float32(env_lib.FAULT_FLOOR),
+                                    np.float32(1.0)}
+    down = float(np.mean(vals == np.float32(env_lib.FAULT_FLOOR)))
+    assert abs(down - 0.3) < 0.05  # counter-PRNG telegraph hits the duty
+
+
+def test_jitter_bounds_and_compounding():
+    ev = cong.jitter(0.0, 1.0, severity=0.5, link_group=env_lib.GROUP_HOT)
+    vals = [_scale([ev], env_lib.GROUP_HOT,
+                   (s + 0.5) * env_lib.FLAP_SLOT_S) for s in range(200)]
+    assert min(vals) >= 0.5 and max(vals) <= 1.0
+    assert np.std(vals) > 0.01  # actually wobbles
+    # rows targeting the same group multiply
+    o = cong.outage(0.0, 1.0, 0.5)
+    both = _scale([o, o], env_lib.GROUP_HOT, 0.5)
+    assert both == pytest.approx(0.25)
+
+
+def test_fault_table_overflow_raises():
+    with pytest.raises(ValueError):
+        cong.fault_table([cong.outage(0, 1, 0.5)]
+                         * (env_lib.FAULT_EVENTS + 1))
+
+
+# --------------------------------------------------------------------------
+# engine inertness: all-none table / inf node cap are bit-identical
+# --------------------------------------------------------------------------
+
+def _cell(n_nodes=8, policy=0, intra_node=False):
+    topo = topo_lib.leaf_spine(n_nodes)
+    vidx, aidx = cong.interleaved_split(n_nodes)
+    nodes = np.arange(n_nodes)
+    flows = cong.build_flowset(topo, nodes[vidx], nodes[aidx],
+                               "ring_allgather", "incast", 1 << 20,
+                               phased=True)
+    geom = sim.make_geometry(topo, flows, intra_node=intra_node)
+    return geom, flows, policy
+
+
+def _params(geom, flows, policy, fault=None, node_cap=np.inf):
+    return sim.make_params(cc_lib.dcqcn(), dt=2e-6,
+                           bytes_per_iter=flows.bytes_per_iter,
+                           host_caps=flows.host_caps,
+                           env=cong.steady().params(), policy=policy,
+                           flowlet_gap_s=50e-6, fault=fault,
+                           node_cap=node_cap)
+
+
+def _run_steps(geom, p, backend, n=25):
+    stepf = jax.jit(lambda s: jax.lax.scan(
+        lambda c, _: sim.step(geom, p, c, backend=backend),
+        s, None, length=n))
+    return stepf(sim.init_state(geom, p))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("policy", list(range(5)))
+def test_inert_fault_table_bit_identical(backend, policy):
+    """The all-``none`` table lowers to an exact 1.0 capacity scale:
+    every state leaf and the goodput trace must match the table-free
+    engine bit-for-bit, on both step-core backends, under every traced
+    routing policy."""
+    geom, flows, policy = _cell(policy=policy)
+    s0, gp0 = _run_steps(geom, _params(geom, flows, policy), backend)
+    s1, gp1 = _run_steps(
+        geom, _params(geom, flows, policy, fault=cong.no_fault_table()),
+        backend)
+    np.testing.assert_array_equal(np.asarray(gp0), np.asarray(gp1))
+    for k in s0:
+        assert np.array_equal(np.asarray(s0[k]), np.asarray(s1[k])), k
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_inf_node_cap_stage_bit_identical(backend):
+    """intra_node=True with node_cap=+inf is an exact no-op: the scale
+    is min(1, inf/load) == 1.0 and inject * 1.0 is bit-exact."""
+    geom0, flows, _ = _cell()
+    geom1, _, _ = _cell(intra_node=True)
+    s0, gp0 = _run_steps(geom0, _params(geom0, flows, 0), backend)
+    s1, gp1 = _run_steps(geom1, _params(geom1, flows, 0), backend)
+    np.testing.assert_array_equal(np.asarray(gp0), np.asarray(gp1))
+    for k in s0:
+        assert np.array_equal(np.asarray(s0[k]), np.asarray(s1[k])), k
+
+
+def test_active_fault_actually_bites():
+    """Guard against an accidentally-inert implementation: a hard outage
+    on the hot link must change the state, and a tight node cap must cut
+    goodput."""
+    geom, flows, _ = _cell()
+    table = cong.fault_table([cong.outage(0.0, 1.0, 1.0)])
+    _, gp0 = _run_steps(geom, _params(geom, flows, 0), "ref", n=50)
+    _, gp1 = _run_steps(geom, _params(geom, flows, 0, fault=table),
+                        "ref", n=50)
+    assert float(jnp.sum(gp1)) < float(jnp.sum(gp0))
+
+    geom_in, flows_in, _ = _cell(intra_node=True)
+    cap = 0.25 * float(np.max(np.asarray(flows_in.host_caps)))
+    _, gp2 = _run_steps(geom_in, _params(geom_in, flows_in, 0), "ref", n=50)
+    _, gp3 = _run_steps(geom_in,
+                        _params(geom_in, flows_in, 0, node_cap=cap),
+                        "ref", n=50)
+    assert float(jnp.sum(gp3)) < float(jnp.sum(gp2))
+
+
+def test_geometry_link_groups_cover_topology():
+    """make_geometry stamps every real link with a structural group and
+    promotes exactly one most-traversed link to GROUP_HOT; the padding
+    lane (index L) stays GROUP_NONE so faults can never touch it."""
+    geom, _, _ = _cell()
+    lg = np.asarray(geom.link_group)
+    assert lg.shape == (int(geom.L) + 1,)
+    assert lg[int(geom.L)] == env_lib.GROUP_NONE
+    assert int(np.sum(lg == env_lib.GROUP_HOT)) == 1
+    assert {env_lib.GROUP_EDGE_UP, env_lib.GROUP_EDGE_DOWN} \
+        <= set(lg.tolist())
+
+
+# --------------------------------------------------------------------------
+# profile-layer contracts
+# --------------------------------------------------------------------------
+
+def test_empty_mix_raises_not_silently_off():
+    with pytest.raises(ValueError, match="zero components"):
+        cong.multi_tenant().params()
+
+
+def test_degenerate_profile_labels_are_honest():
+    assert "(=off)" in cong.bursty(0.0, 5e-3).label()
+    assert "(=on)" in cong.bursty(5e-3, 0.0).label()
+    assert "(=step)" in cong.ramp(0.0).label()
+    assert "(=off)" in cong.random_onoff(0.0, 5e-3).label()
+    zero_mix = cong.multi_tenant((cong.steady(), 0.0))
+    assert "(=off)" in zero_mix.label()
+    # non-degenerate labels stay unannotated
+    assert "(=" not in cong.bursty(2e-3, 8e-3).label()
+
+
+def test_fault_profile_labels_and_helpers():
+    p = cong.with_node_cap(
+        cong.with_faults(cong.steady(),
+                         cong.flap(0.2e-3, 20e-3, duty=0.3, seed=5)), 0.5)
+    lab = p.label()
+    assert lab.startswith("steady+flap[hot 0.3") and "+node0.5x" in lab
+    assert p.fault_params() is not None
+    assert cong.no_congestion().fault_params() is None
+    assert cong.needs_fault_table([cong.steady(), p])
+    assert not cong.needs_fault_table([cong.steady()])
+
+
+# --------------------------------------------------------------------------
+# scenario families: one compile per GeometryDims bucket
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["link_fault", "intra_node"])
+def test_fault_families_one_compile_per_bucket(name):
+    """The fault table and node cap are traced DATA: a shrunk two-cell
+    grid of each new family must reuse one run_cells_hetero compile for
+    its bucket (the same contract every other scale-batched family
+    keeps)."""
+    scenario = scen.get(name, quick=True)
+    grid = scenario.grids[0]
+    grid = dataclasses.replace(grid, sizes=grid.sizes[:1],
+                               profiles=grid.profiles[:2],
+                               cells=grid.cells[:2])
+    scenario = dataclasses.replace(scenario, n_iters=6, warmup=1,
+                                   grids=(grid,))
+    before = sim.trace_count("run_cells_hetero")
+    rows = [scen.result_row(grid, r)
+            for r in scen.run_grid_spec(scenario, grid)]
+    assert rows and all(float(r["ratio"]) > 0 for r in rows)
+    assert sim.trace_count("run_cells_hetero") - before <= 1, name

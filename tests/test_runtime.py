@@ -114,6 +114,58 @@ def test_elastic_plan():
         fault.elastic_plan(8, 16)
 
 
+def test_monitor_reset_rebaselines_after_legit_rescale():
+    """Flagged steps never feed the EMA, so after a rescale to a
+    legitimately slower steady state the monitor used to stay tripped
+    forever against the stale baseline. reset(rebaseline=True) re-seeds
+    the EMA from the recent (slow) history and the monitor accepts the
+    new steady state; without reset it keeps flagging."""
+    durs = [1.0] * 4 + [10.0] * 8  # rescale at step 4: 10x slower forever
+    t, clk = [0.0], (lambda: t[0])
+    mon = fault.StepMonitor(threshold=2.5, trip_after=3, clock=clk)
+    tripped_at = None
+    for s, d in enumerate(durs):
+        mon.start_step()
+        t[0] += d
+        st = mon.end_step(s)
+        if mon.tripped and tripped_at is None:
+            tripped_at = s
+            assert st.flagged
+            mon.reset(rebaseline=True, window=3)
+    assert tripped_at == 6  # 3 consecutive 10s steps vs the 1s EMA
+    # post-reset: the EMA is the new 10s baseline, no step flags again
+    assert not mon.tripped
+    assert not any(st.flagged for st in mon.history[tripped_at + 1:])
+    assert mon.ema_s == pytest.approx(10.0)
+
+
+def test_monitor_reset_cold_start():
+    t, clk = [0.0], (lambda: t[0])
+    mon = fault.StepMonitor(threshold=2.0, trip_after=1, clock=clk)
+    for s, d in enumerate([1.0, 5.0]):
+        mon.start_step()
+        t[0] += d
+        mon.end_step(s)
+    assert mon.tripped
+    mon.reset(rebaseline=False)
+    assert mon.ema_s is None and not mon.tripped
+    # first step after a cold reset seeds the EMA like a fresh monitor
+    mon.start_step()
+    t[0] += 7.0
+    assert not mon.end_step(2).flagged
+    assert mon.ema_s == pytest.approx(7.0)
+
+
+def test_restart_policy_denied_calls_do_not_burn_budget():
+    pol = fault.RestartPolicy(max_restarts=2)
+    assert pol.should_restart() and pol.should_restart()
+    assert pol.restarts == 2
+    # exhausted: probing the policy again must not mutate the counter
+    for _ in range(5):
+        assert not pol.should_restart()
+    assert pol.restarts == 2
+
+
 # --------------------------------------------------------------------------
 # serving
 # --------------------------------------------------------------------------

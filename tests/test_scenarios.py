@@ -23,8 +23,10 @@ GRID_DRIVER_COLS = {"ratio", "t_uncongested_us", "t_congested_us"}
 def test_every_scenario_builds_quick_and_full():
     assert scen.SCENARIOS, "registry is empty"
     # the mitigation lab's families must stay registered (its scoring
-    # panel is drawn from the registry — score.panel_from_scenario)
-    assert {"mitigation_panel", "mitigation_routing"} <= set(scen.SCENARIOS)
+    # panel is drawn from the registry — score.panel_from_scenario), and
+    # so must the fault-engine families benchmarks.fault_scenarios runs
+    assert {"mitigation_panel", "mitigation_routing",
+            "link_fault", "intra_node"} <= set(scen.SCENARIOS)
     for name in scen.SCENARIOS:
         for quick in (False, True):
             s = scen.get(name, quick)
