@@ -69,6 +69,9 @@ def predict_analytic(kind: str, algo: str, n: int, vector_bytes: float,
 def _simulated_point(system_name: str, n: int, coll: str, vector_bytes: float,
                      profile_kind: str, burst_s: float, pause_s: float,
                      aggressor: str) -> float:
+    # Thin client of search.simulated_times, whose own lru table is
+    # agent-aware (keyed on the Candidate too) — this cache only saves
+    # the Profile reconstruction for the default-candidate tier.
     from repro.core.mitigation import search
 
     prof = {"off": cong.no_congestion(), "steady": cong.steady(),

@@ -30,12 +30,13 @@ from repro.core.collectives import wire_bytes_model
 from repro.core.envelopes import (ENV_COMPONENTS, FAULT_EVENTS,  # noqa: F401
                                   FAULT_FIELDS, GROUP_EDGE_DOWN,
                                   GROUP_EDGE_UP, GROUP_FABRIC, GROUP_HOT,
-                                  FaultEvent, Profile, bursty, degrade,
-                                  envelope_at, envelope_np, fault_scale_at,
-                                  fault_scale_np, fault_table, flap, jitter,
-                                  multi_tenant, needs_fault_table,
-                                  no_congestion, no_fault_table, outage,
-                                  ramp, random_onoff, steady, with_faults,
+                                  GROUP_SWITCH, FaultEvent, Profile, bursty,
+                                  degrade, envelope_at, envelope_np,
+                                  fault_scale_at, fault_scale_np, fault_table,
+                                  flap, jitter, multi_tenant,
+                                  needs_fault_table, no_congestion,
+                                  no_fault_table, outage, ramp, random_onoff,
+                                  steady, switch_outage, with_faults,
                                   with_node_cap)
 from repro.core.fabric.routing import assign_paths
 from repro.core.fabric.simulator import FlowSet, pack_paths

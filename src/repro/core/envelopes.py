@@ -155,13 +155,21 @@ GROUP_EDGE_UP = 1    # host -> leaf switch (injection edge)
 GROUP_EDGE_DOWN = 2  # leaf switch -> host (delivery edge)
 GROUP_FABRIC = 3     # switch -> switch
 GROUP_HOT = 4        # the single most-traversed link (overrides the above)
+# Switch-level group (ROADMAP item 4 follow-up): the busiest switch's
+# whole incident link set fails as one unit — a line-card / PSU loss,
+# not a single cable. Stamped on a SEPARATE geometry array
+# (FabricGeometry.link_sw_group) so promoting a switch can never
+# re-label the per-link groups existing event rows target: with no
+# GROUP_SWITCH row in a table the extra match is all-False and the
+# fault scale is bit-identical to the pre-switch-group engine.
+GROUP_SWITCH = 5
 
 _FAULT_IDS = {"none": FAULT_NONE, "outage": FAULT_OUTAGE,
               "flap": FAULT_FLAP, "degrade": FAULT_DEGRADE,
               "jitter": FAULT_JITTER}
 _GROUP_LABELS = {GROUP_NONE: "none", GROUP_EDGE_UP: "up",
                  GROUP_EDGE_DOWN: "down", GROUP_FABRIC: "fab",
-                 GROUP_HOT: "hot"}
+                 GROUP_HOT: "hot", GROUP_SWITCH: "sw"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,6 +220,16 @@ def jitter(t_start: float, duration: float, severity: float = 0.5,
                       link_group, seed)
 
 
+def switch_outage(t_start: float, duration: float, severity: float = 1.0,
+                  seed: int = 1) -> FaultEvent:
+    """The busiest switch loses (a fraction of) EVERY incident link for
+    the window — a line-card / PSU failure rather than a single cable.
+    Targets GROUP_SWITCH, which matches against the geometry's
+    ``link_sw_group`` array (the promoted switch's whole link set)."""
+    return FaultEvent("outage", t_start, duration, severity,
+                      GROUP_SWITCH, seed)
+
+
 def fault_table(events=()) -> np.ndarray:
     """Lower events to the fixed (FAULT_EVENTS, FAULT_FIELDS) table the
     step consumes; unused rows are ``none`` (scale 1)."""
@@ -233,7 +251,7 @@ def no_fault_table() -> np.ndarray:
     return fault_table(())
 
 
-def fault_scale_at(fault, link_group, t):
+def fault_scale_at(fault, link_group, t, link_sw_group=None):
     """Traceable per-link capacity scale at sim time ``t``.
 
     ``fault`` is a (FAULT_EVENTS, FAULT_FIELDS) float array and
@@ -241,6 +259,13 @@ def fault_scale_at(fault, link_group, t):
     float32 scale in [FAULT_FLOOR, 1]. Rows multiply, so overlapping
     events compound. Evaluated in the jitted step *outside* the kernel
     launch — the scaled caps ride in as a plain operand.
+
+    ``link_sw_group`` is the optional second structural channel
+    (GROUP_SWITCH on the promoted switch's incident links, 0 elsewhere):
+    a row matches a link through EITHER array. With no GROUP_SWITCH row
+    in the table the second match is all-False and the result is
+    bit-identical to the single-channel scale (the unused-guard contract
+    tests/test_faults.py pins).
     """
     import jax.numpy as jnp
 
@@ -274,11 +299,16 @@ def fault_scale_at(fault, link_group, t):
     lg = link_group.astype(jnp.int32)
     match = (grp[:, None] == lg[None, :]) & (kind[:, None] != FAULT_NONE) \
         & (lg[None, :] != GROUP_NONE)
+    if link_sw_group is not None:
+        sg = link_sw_group.astype(jnp.int32)
+        match = match | ((grp[:, None] == sg[None, :])
+                         & (kind[:, None] != FAULT_NONE)
+                         & (sg[None, :] != GROUP_NONE))
     return jnp.prod(jnp.where(match, s[:, None], jnp.float32(1.0)), axis=0)
 
 
 def fault_scale_np(fault: np.ndarray, link_group: np.ndarray,
-                   t: float) -> np.ndarray:
+                   t: float, link_sw_group=None) -> np.ndarray:
     """NumPy mirror of :func:`fault_scale_at` at one scalar time (float32
     arithmetic throughout, bit-matching the traced path)."""
     fault = np.asarray(fault, np.float32)
@@ -308,6 +338,11 @@ def fault_scale_np(fault: np.ndarray, link_group: np.ndarray,
     s = np.maximum(s, np.float32(FAULT_FLOOR)).astype(np.float32)
     match = (grp[:, None] == link_group[None, :]) \
         & (kind[:, None] != FAULT_NONE) & (link_group[None, :] != GROUP_NONE)
+    if link_sw_group is not None:
+        sg = np.asarray(link_sw_group, np.int32)
+        match = match | ((grp[:, None] == sg[None, :])
+                         & (kind[:, None] != FAULT_NONE)
+                         & (sg[None, :] != GROUP_NONE))
     return np.prod(np.where(match, s[:, None], one),
                    axis=0, dtype=np.float32)
 

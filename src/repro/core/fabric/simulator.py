@@ -58,7 +58,8 @@ from repro.core.fabric.routing import (POLICY_ADAPTIVE, POLICY_ECMP,
 from repro.core.fabric.topology import Topology
 from repro.core.envelopes import (ENV_COMPONENTS, GROUP_EDGE_DOWN,
                                   GROUP_EDGE_UP, GROUP_FABRIC, GROUP_HOT,
-                                  envelope_at, fault_scale_at, no_congestion)
+                                  GROUP_SWITCH, envelope_at, fault_scale_at,
+                                  no_congestion)
 from repro.core.traffic import pad_rows
 from repro.kernels import ops as kernel_ops
 from repro.kernels import ref as kernel_ref
@@ -246,7 +247,7 @@ def pack_paths(paths_per_flow: List[List[List[int]]], sink: int, k_max: int = 4)
                       "n_paths", "spray_choice", "path_len", "is_victim",
                       "fixed_choice", "ecmp_choice", "nslb_choice", "src_id",
                       "flow_job", "flow_phase", "n_phases", "phase_gap",
-                      "link_group"],
+                      "link_group", "link_sw_group"],
          meta_fields=["L", "n_sw", "n_src", "n_jobs", "intra_node"])
 @dataclasses.dataclass(frozen=True)
 class FabricGeometry:
@@ -280,6 +281,12 @@ class FabricGeometry:
     # structural fault-targeting groups per link (envelopes.GROUP_*);
     # 0 on the sink and padding so event rows can never touch them
     link_group: jnp.ndarray  # (L+1,) int32
+    # second structural channel: GROUP_SWITCH on every link incident to
+    # the busiest switch (a whole switch failing as one unit), 0
+    # elsewhere. Separate from link_group so the promotion can never
+    # re-label the ids existing event rows target (bit-identity when no
+    # row uses GROUP_SWITCH — envelopes.fault_scale_at).
+    link_sw_group: jnp.ndarray  # (L+1,) int32
     L: int
     n_sw: int
     n_src: int
@@ -347,6 +354,21 @@ def make_geometry(topo: Topology, flows: FlowSet, prune: bool = True,
     traversals = np.bincount(paths_np[paths_np < L].ravel(), minlength=L)
     if traversals.size and traversals.max() > 0:
         link_group[int(np.argmax(traversals))] = GROUP_HOT
+    # switch-level group: the busiest switch (max summed path traversals
+    # over its incident links) contributes its WHOLE link set — the
+    # deterministic switch analog of GROUP_HOT, so switch_outage events
+    # target it without naming ids. Kept in a separate array; the sink
+    # (index L) and host endpoints (switch id 0) stay GROUP_NONE.
+    link_sw_group = np.zeros(L + 1, np.int32)
+    if traversals.size and traversals.max() > 0:
+        sw_load = np.zeros(n_sw, np.float64)
+        np.add.at(sw_load, src_sw[:L], traversals)
+        np.add.at(sw_load, dst_sw[:L], traversals)
+        sw_load[0] = 0.0  # "no switch" (host endpoints) is not a switch
+        if sw_load.max() > 0:
+            hot_sw = int(np.argmax(sw_load))
+            incident = (src_sw[:L] == hot_sw) | (dst_sw[:L] == hot_sw)
+            link_sw_group[:L][incident] = GROUP_SWITCH
     # source (NIC) ids densified the same way
     src_raw = np.asarray(flows.src_id, np.int64)
     if prune and len(src_raw):
@@ -376,6 +398,7 @@ def make_geometry(topo: Topology, flows: FlowSet, prune: bool = True,
         n_phases=jnp.asarray(flows.n_phases, jnp.int32),
         phase_gap=jnp.asarray(flows.phase_gap, jnp.float32),
         link_group=jnp.asarray(link_group),
+        link_sw_group=jnp.asarray(link_sw_group),
         L=L, n_sw=n_sw, n_src=n_src, n_jobs=flows.n_jobs,
         intra_node=int(bool(intra_node)))
 
@@ -482,6 +505,8 @@ def pad_geometry(geom: FabricGeometry, dims: GeometryDims) -> FabricGeometry:
     # pad links stay GROUP_NONE: no fault event can ever scale them
     link_group = np.zeros((L_new + 1,), np.int32)
     link_group[:L_old] = np.asarray(geom.link_group)[:L_old]
+    link_sw_group = np.zeros((L_new + 1,), np.int32)
+    link_sw_group[:L_old] = np.asarray(geom.link_sw_group)[:L_old]
 
     n_phases = pad_rows(np.asarray(geom.n_phases), J, 1)
     phase_gap = np.zeros((J, dims.n_phases), np.float32)
@@ -505,6 +530,7 @@ def pad_geometry(geom: FabricGeometry, dims: GeometryDims) -> FabricGeometry:
         flow_phase=jnp.asarray(pad_rows(np.asarray(geom.flow_phase), F, 0)),
         n_phases=jnp.asarray(n_phases), phase_gap=jnp.asarray(phase_gap),
         link_group=jnp.asarray(link_group),
+        link_sw_group=jnp.asarray(link_sw_group),
         L=L_new, n_sw=dims.n_sw, n_src=dims.n_src, n_jobs=J,
         intra_node=int(dims.intra_node))
 
@@ -770,7 +796,8 @@ def _step_impl(geom: FabricGeometry, p: SimParams, state, with_aux: bool,
     caps_lk = geom.caps_finite
     if p.fault is not None:
         caps_lk = caps_lk * fault_scale_at(p.fault, geom.link_group,
-                                           state["t"])
+                                           state["t"],
+                                           link_sw_group=geom.link_sw_group)
 
     # ---- optional intra-node stage (NVLink/PCIe ahead of the NIC) ----
     # Flows sharing a source node proportionally split the node's

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -203,22 +204,28 @@ def _jain(x: np.ndarray) -> float:
     return float((x.sum() ** 2) / (len(x) * np.sum(x * x)))
 
 
-def run_candidates(panel: Sequence[PanelCell],
-                   candidates: Sequence[Candidate], *,
-                   n_iters: int = 12, warmup: int = 3,
-                   max_steps: int = 200_000, chunk: int = 2048,
-                   stride: int = 8, mesh=None,
-                   launcher=None) -> List[CellRun]:
-    """Score every candidate on every panel cell in one batched call:
-    geometries pad into one GeometryDims bucket (routing is traced data,
-    so mixed-policy candidates share the compile) and params carry
-    (cell, candidate x {baseline, congested}) lanes.
-
-    ``mesh``/``launcher`` shard the candidate LANES across devices via
-    the sweep launcher (launch/sweep.py): panels are typically a handful
-    of cells but candidate batches grow with the search space, so the
-    lane axis is the one worth splitting. The default per-device
-    dispatcher keeps results bit-identical to the single-device call."""
+def run_candidate_rows(panel: Sequence[PanelCell],
+                       cand_rows: Sequence[Sequence[Candidate]], *,
+                       n_iters: int = 12, warmup: int = 3,
+                       max_steps: int = 200_000, chunk: int = 2048,
+                       stride: int = 8, mesh=None,
+                       launcher=None) -> List[CellRun]:
+    """Per-cell candidate rows in one batched call: ``cand_rows[i]`` is
+    the candidate list measured on ``panel[i]``. Rows must share one
+    length — the lane axis is rectangular — which is what lets the
+    what-if server coalesce *different* queries' (cells x candidates)
+    into a single ``run_cells_hetero`` launch (runtime/whatif.py pads
+    short rows with repeats). Per-cell lane construction is identical to
+    :func:`run_candidates`, so a coalesced run is bit-identical to the
+    per-query serial runs it replaces (lanes are independent under vmap;
+    bucket padding is inert — tests/test_whatif.py pins it)."""
+    if len(cand_rows) != len(panel):
+        raise ValueError(f"{len(cand_rows)} candidate rows for "
+                         f"{len(panel)} panel cells")
+    widths = {len(r) for r in cand_rows}
+    if len(widths) != 1:
+        raise ValueError(f"candidate rows must share one length, got "
+                         f"{sorted(widths)}")
     bench.check_iter_budget(n_iters)
     launcher = bench._resolve_launcher(mesh, launcher, shard_axis="lane")
     # policy_tables: candidates cross-select ECMP/NSLB as traced data,
@@ -235,12 +242,12 @@ def run_candidates(panel: Sequence[PanelCell],
              for c in panel]
     dims, stacked = bench.bucket_stack([c.geom for c in cases])
     dts, rows = [], []
-    for cell, case in zip(panel, cases):
+    for cell, case, cands in zip(panel, cases, cand_rows):
         dt = bench.choose_dt(case.topo, case.n_victims, cell.vector_bytes,
                              case.lat(), n_phases=case.max_phases)
         dts.append(dt)
         lane = []
-        for cand in candidates:
+        for cand in cands:
             for prof in (cong.no_congestion(), cell.profile):
                 p = case.cell_params(cell.vector_bytes, prof, dt,
                                      n_flows=dims.n_flows,
@@ -260,7 +267,7 @@ def run_candidates(panel: Sequence[PanelCell],
         lat = case.lat()
         F = case.geom.n_flows
         vmask = np.asarray(case.is_victim, bool)
-        for ki, cand in enumerate(candidates):
+        for ki, cand in enumerate(cand_rows[ci]):
             base_i, cong_i = 2 * ki, 2 * ki + 1
             base = sim.summarize(out, n_iters=n_iters, warmup=warmup, dt=dt,
                                  chunk=chunk, stride=stride,
@@ -286,24 +293,73 @@ def run_candidates(panel: Sequence[PanelCell],
     return runs
 
 
+def run_candidates(panel: Sequence[PanelCell],
+                   candidates: Sequence[Candidate], *,
+                   n_iters: int = 12, warmup: int = 3,
+                   max_steps: int = 200_000, chunk: int = 2048,
+                   stride: int = 8, mesh=None,
+                   launcher=None) -> List[CellRun]:
+    """Score every candidate on every panel cell in one batched call:
+    geometries pad into one GeometryDims bucket (routing is traced data,
+    so mixed-policy candidates share the compile) and params carry
+    (cell, candidate x {baseline, congested}) lanes. The uniform-row
+    special case of :func:`run_candidate_rows`.
+
+    ``mesh``/``launcher`` shard the candidate LANES across devices via
+    the sweep launcher (launch/sweep.py): panels are typically a handful
+    of cells but candidate batches grow with the search space, so the
+    lane axis is the one worth splitting. The default per-device
+    dispatcher keeps results bit-identical to the single-device call."""
+    return run_candidate_rows(panel, [list(candidates)] * len(panel),
+                              n_iters=n_iters, warmup=warmup,
+                              max_steps=max_steps, chunk=chunk,
+                              stride=stride, mesh=mesh, launcher=launcher)
+
+
 # --------------------------------------------------------------------------
 # Shared simulator-backed point scoring (autotune's table tier)
 # --------------------------------------------------------------------------
 
 
-def simulated_times(system_name: str, n_nodes: int, victim: str,
-                    aggressor: str, vector_bytes: float,
-                    profile: cong.Profile, *, n_iters: int = 20,
-                    warmup: int = 4) -> Tuple[float, float]:
-    """(t_uncongested, t_congested) for one cell — THE simulator-backed
-    scoring path, shared by the mitigation search (a 1-candidate panel)
-    and autotune.predict_simulated's lru-cached table tier."""
+@lru_cache(maxsize=1024)
+def _times_table(system_name: str, n_nodes: int, victim: str,
+                 aggressor: str, vector_bytes: float, profile: cong.Profile,
+                 candidate: Candidate, n_iters: int,
+                 warmup: int) -> Tuple[float, float]:
     cell = PanelCell(name="point", system=get_system(system_name),
                      n_nodes=n_nodes, victim=victim, aggressor=aggressor,
                      vector_bytes=float(vector_bytes), profile=profile)
-    run = run_candidates([cell], [default_candidate()], n_iters=n_iters,
+    run = run_candidates([cell], [candidate], n_iters=n_iters,
                          warmup=warmup)[0]
     return run.t_uncongested_s, run.t_congested_s
+
+
+def simulated_times(system_name: str, n_nodes: int, victim: str,
+                    aggressor: str, vector_bytes: float,
+                    profile: cong.Profile, *,
+                    candidate: Optional[Candidate] = None,
+                    n_iters: int = 20, warmup: int = 4
+                    ) -> Tuple[float, float]:
+    """(t_uncongested, t_congested) for one cell — THE simulator-backed
+    scoring path, shared by the mitigation search (a 1-candidate panel)
+    and autotune.predict_simulated's lru-cached table tier.
+
+    The lru table behind it is *agent-aware*: it is keyed on the
+    candidate as well as the (system, scale, traffic, profile) point, so
+    a search agent re-scoring a point it (or any other agent) already
+    evaluated hits the table instead of re-tracing and re-running the
+    simulator — ``Profile`` and ``Candidate`` are frozen dataclasses of
+    hashables, so they key directly. Inspect/clear via
+    :func:`simulated_times_cache_info` / ``_times_table.cache_clear``."""
+    cand = candidate if candidate is not None else default_candidate()
+    return _times_table(system_name, int(n_nodes), victim, aggressor,
+                        float(vector_bytes), profile, cand, int(n_iters),
+                        int(warmup))
+
+
+def simulated_times_cache_info():
+    """Hit/miss counters of the agent-aware point table (test hook)."""
+    return _times_table.cache_info()
 
 
 def sawtooth_cv(system_name: str, n_nodes: int, coll: str,

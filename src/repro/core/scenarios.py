@@ -537,7 +537,14 @@ def link_fault(quick: bool = False) -> Scenario:
         clean_profiles = (hot_flap, dying_optic, fabric_jitter,
                           cong.with_faults(
                               cong.no_congestion(),
-                              cong.outage(0.5e-3, 2e-3, severity=1.0)))
+                              cong.outage(0.5e-3, 2e-3, severity=1.0)),
+                          # switch-level variant: the busiest switch's
+                          # whole link set fails as one unit (line-card
+                          # loss; GROUP_SWITCH matches link_sw_group)
+                          cong.with_faults(
+                              cong.no_congestion(),
+                              cong.switch_outage(0.5e-3, 2e-3,
+                                                 severity=0.9)))
         sizes = (256 * KiB, 2 * MiB)
     grids = (
         # no aggressor: every flow is the victim's, so GROUP_HOT is the

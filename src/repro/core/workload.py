@@ -23,7 +23,9 @@ replay as one ``jit(vmap)``:
   (Bernoulli thinning at rate ``arrivals_mean / short_slots`` — the
   binomial construction of a Poisson arrival count), their arrival times
   (uniform over the horizon — the order statistics of a Poisson process),
-  their sizes (lognormal), a per-tenant CC kind from :attr:`cc_mix`, and
+  their sizes (lognormal, optionally mixed with a bounded Pareto tail —
+  :attr:`WorkloadSpec.short_pareto_frac`), a per-tenant CC kind from
+  :attr:`cc_mix`, and
   a tenant start stagger. All of it lands in existing traced SimParams
   leaves (``bytes_per_iter``, ``flow_start``, ``fct_mask``, per-flow
   ``kind``), so a 1024-seed batch is ``vmap(lower_seed)`` feeding the
@@ -76,6 +78,15 @@ class WorkloadSpec:
     horizon_s: float = 0.02  # arrival window (simulated seconds)
     short_bytes_median: float = float(256 << 10)
     short_sigma: float = 1.2  # lognormal shape (natural-log std)
+    # heavy-tailed size mix (ROADMAP item 3 follow-up): a fraction of
+    # short slots draw from a BOUNDED Pareto (inverse-CDF) instead of the
+    # lognormal — datacenter flow-size surveys put most bytes in a
+    # power-law tail the lognormal underweights. frac = 0.0 keeps the
+    # legacy draws bit-identical (the Pareto keys are never consumed).
+    short_pareto_frac: float = 0.0
+    short_pareto_alpha: float = 1.3  # tail index (smaller = heavier)
+    short_pareto_min: float = float(64 << 10)
+    short_pareto_max: float = float(64 << 20)
     # per-tenant CC mix: (name, probability) — each job draws its kind
     cc_mix: Tuple[Tuple[str, float], ...] = (
         ("dcqcn", 0.5), ("ib", 0.25), ("slingshot", 0.25))
@@ -84,6 +95,14 @@ class WorkloadSpec:
     def __post_init__(self):
         if self.short_slots < 1:
             raise ValueError("short_slots must be >= 1")
+        if not 0.0 <= self.short_pareto_frac <= 1.0:
+            raise ValueError("short_pareto_frac must be in [0, 1]")
+        if self.short_pareto_frac > 0:
+            if self.short_pareto_alpha <= 0:
+                raise ValueError("short_pareto_alpha must be > 0")
+            if not 0 < self.short_pareto_min < self.short_pareto_max:
+                raise ValueError("need 0 < short_pareto_min "
+                                 "< short_pareto_max")
         if not self.cc_mix:
             raise ValueError("cc_mix must not be empty")
         for name, _ in self.cc_mix:
@@ -261,6 +280,20 @@ def lower_seed(t: ReplayTemplate, seed) -> sim.SimParams:
     active = jax.random.bernoulli(k_act, p_on, (S,))
     sizes = spec.short_bytes_median * jnp.exp(
         spec.short_sigma * jax.random.normal(k_size, (S,)))
+    if spec.short_pareto_frac > 0:
+        # bounded Pareto via inverse CDF: x = xm (1 - U (1 - (xm/xM)^a))
+        # ^(-1/a), exactly in [xm, xM]. Drawn from keys folded off the
+        # seed key, so the legacy 5-way split (and therefore every
+        # frac=0 draw: activation, times, CC kinds, staggers) is
+        # untouched — only sizes change, and only on the mixed-in slots.
+        k_mix, k_par = jax.random.split(jax.random.fold_in(key, 1))
+        a = spec.short_pareto_alpha
+        ratio = (spec.short_pareto_min / spec.short_pareto_max) ** a
+        u = jax.random.uniform(k_par, (S,))
+        pareto = spec.short_pareto_min \
+            * (1.0 - u * (1.0 - ratio)) ** (-1.0 / a)
+        heavy = jax.random.bernoulli(k_mix, spec.short_pareto_frac, (S,))
+        sizes = jnp.where(heavy, pareto, sizes)
     starts = jax.random.uniform(k_time, (S,), minval=0.0,
                                 maxval=spec.horizon_s)
     short_bytes = jnp.where(active, sizes, 0.0).astype(jnp.float32)

@@ -159,6 +159,16 @@ def device_launcher(mesh, *, shard_axis: str = "cell",
     return launcher
 
 
+def whatif_launcher(mesh, *, dispatch: str = "devices"):
+    """Lane-sharded launcher for the what-if serving layer
+    (runtime.whatif.WhatIfServer): a coalesced wave stacks queries on
+    the cell axis and candidate generations on the lane axis, so
+    sharding the lane axis spreads each wave's candidate lanes across
+    the mesh while keeping the per-device executables (and hence the
+    results) bit-identical to the single-device path."""
+    return device_launcher(mesh, shard_axis="lane", dispatch=dispatch)
+
+
 # --------------------------------------------------------------------------
 # Measured child workload: quick scale sweep + mitigation panel
 # --------------------------------------------------------------------------

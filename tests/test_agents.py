@@ -1,0 +1,165 @@
+"""Learned mitigation-search agents (ISSUE 10, DESIGN.md §17).
+
+Load-bearing contracts pinned here:
+
+* **Equal-budget convergence** — on the fixed seeded panel, CMA-ES or
+  BO reaches the bounded-grid winner's objective with STRICTLY fewer
+  simulator evaluations than the random-walk baseline (the acceptance
+  criterion the whatif benchmark records).
+* **One batched call per generation** — every generation is one
+  ``run_candidates`` invocation, and once the steady-state lane shape
+  is traced, later generations (and later agents at the same batch
+  size) add zero new ``run_cells_hetero`` compiles.
+* **Determinism** — a fixed seed fixes the whole search: proposals,
+  scores, trajectory.
+* **Memoization** — re-proposed candidates are served from the
+  evaluator's label-keyed table, never re-simulated.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import congestion as cong
+from repro.core.fabric import simulator as sim
+from repro.core.fabric.systems import get_system
+from repro.core.mitigation import agents, search
+from repro.core.mitigation.search import Candidate, PanelCell
+
+KW = dict(n_iters=5, warmup=2, max_steps=60_000)
+KNOBS = ("hol_factor", "md")
+
+
+@functools.lru_cache(maxsize=None)
+def _panel():
+    """One collision-prone cell whose objective actually moves under
+    the searched knobs (probed spread ~0.50-0.56)."""
+    return (PanelCell(name="ecmp8", system=get_system("nanjing_ecmp"),
+                      n_nodes=8, victim="ring_allgather",
+                      aggressor="alltoall", vector_bytes=float(4 << 20),
+                      profile=cong.steady()),)
+
+
+# --------------------------------------------------------------------------
+# pure-host contracts (no simulator)
+# --------------------------------------------------------------------------
+
+
+def test_unit_cube_roundtrip_and_clipping():
+    ag = agents.make_agent("random", knobs=KNOBS, batch=2, seed=3)
+    x = np.asarray([0.25, 0.75])
+    c = ag.to_candidate(x)
+    np.testing.assert_allclose(ag.to_vector(c), x, atol=1e-12)
+    vals = dict(c.cc)
+    from repro.core.fabric.cc import SEARCH_BOUNDS
+    for k in KNOBS:
+        lo, hi = SEARCH_BOUNDS[k]
+        assert lo <= vals[k] <= hi
+    # out-of-cube vectors clip to the bounds instead of escaping them
+    edge = dict(ag.to_candidate(np.asarray([-3.0, 7.0])).cc)
+    assert edge["hol_factor"] == SEARCH_BOUNDS["hol_factor"][0]
+    assert edge["md"] == SEARCH_BOUNDS["md"][1]
+
+
+def test_agent_registry_and_knob_validation():
+    assert set(agents.AGENTS) == {"random", "ga", "cmaes", "bo"}
+    with pytest.raises(KeyError):
+        agents.make_agent("annealing")
+    with pytest.raises(KeyError):
+        # "kind" is the integer CC-kind axis — not a continuous knob
+        agents.make_agent("random", knobs=("kind",))
+    with pytest.raises(ValueError):
+        agents.make_agent("ga", batch=0)
+
+
+@pytest.mark.parametrize("kind", sorted(agents.AGENTS))
+def test_agent_proposals_deterministic_under_seed(kind):
+    """Same seed + same synthetic observations => identical proposal
+    stream; a different seed diverges. (No simulator involved.)"""
+
+    def drive(seed):
+        ag = agents.make_agent(kind, knobs=KNOBS, batch=4, seed=seed)
+        seen = []
+        for g in range(4):
+            props = ag.propose(ag.history)
+            assert len(props) == 4
+            seen.extend(c.label() for c in props)
+            # synthetic but deterministic objective: distance to a corner
+            obs = [agents.Observation(
+                c, -float(np.sum((ag.to_vector(c) - 0.2) ** 2)), None)
+                for c in props]
+            ag.observe(obs)
+        return seen
+
+    assert drive(7) == drive(7)
+    assert drive(7) != drive(8)
+
+
+def test_trajectory_evals_to():
+    tr = agents.Trajectory(agent="x", evals=[4, 8, 12],
+                           best=[0.1, 0.5, 0.6])
+    assert tr.evals_to(0.5) == 8
+    assert tr.evals_to(0.05) == 4
+    assert tr.evals_to(0.9) is None
+
+
+# --------------------------------------------------------------------------
+# batched evaluation: memo table, default baseline, compile sharing
+# --------------------------------------------------------------------------
+
+
+def test_evaluator_memoizes_and_charges_fresh_only():
+    ev = agents.PanelEvaluator(_panel(), **KW)
+    c1 = Candidate(cc=(("hol_factor", 0.3), ("md", 0.5)))
+    c2 = Candidate(cc=(("hol_factor", 0.7), ("md", 0.5)))
+    s = ev.evaluate([c1, c2])
+    assert ev.evals == 2 and ev.calls == 1 and ev.table_hits == 0
+    # the default baseline rode the first batch (needed by aggregate)
+    assert "default" in ev.table
+    again = ev.evaluate([c1, c1, c2])
+    assert ev.evals == 2 and ev.calls == 1 and ev.table_hits == 3
+    assert [x.candidate for x in again] == [s[0].candidate,
+                                            s[0].candidate,
+                                            s[1].candidate]
+    # fresh + memoized mix charges only the fresh point
+    c3 = Candidate(cc=(("hol_factor", 0.5), ("md", 0.9)))
+    ev.evaluate([c1, c3])
+    assert ev.evals == 3 and ev.calls == 2 and ev.table_hits == 4
+
+
+def test_compare_agents_convergence_and_compile_contract():
+    """The headline acceptance test: at equal budget on the fixed seeded
+    panel, CMA-ES or BO reaches the bounded-grid winner's objective with
+    strictly fewer simulator evaluations than random walk; every
+    generation is one batched call; steady-state generations add no new
+    compiles; the whole search is seed-deterministic."""
+    before = sim.trace_count("run_cells_hetero")
+    rep = agents.compare_agents(["random", "ga", "cmaes", "bo"], _panel(),
+                                budget=24, batch=8, knobs=KNOBS, seed=0,
+                                **KW)
+    new_traces = sim.trace_count("run_cells_hetero") - before
+    assert rep["target"]["objective"] > 0.5  # congestion actually bites
+
+    def reached(kind):
+        e = rep["agents"][kind]["evals_to_target"]
+        return float("inf") if e is None else e
+
+    assert min(reached("cmaes"), reached("bo")) < reached("random"), rep
+    for kind, d in rep["agents"].items():
+        assert d["evals"][-1] >= 24, (kind, d["evals"])
+        assert d["best"] == sorted(d["best"]), kind  # monotone best-so-far
+        assert d["best"][-1] <= rep["target"]["objective"] + 0.05
+        # once the steady-state lane shape exists, later generations re-use
+        # the executable (trace deltas flatten after the second generation)
+        assert d["traces"][-1] == d["traces"][1], (kind, d["traces"])
+    # across the whole 4-agent comparison + grid reference only a handful
+    # of lane shapes exist (grid width, first-gen width, steady width,
+    # and table-hit-shortened rows) — far fewer than total generations
+    assert new_traces <= 6, new_traces
+
+    # determinism: the same seed reproduces the cmaes trajectory exactly
+    ag = agents.make_agent("cmaes", knobs=KNOBS, batch=8, seed=0)
+    traj = agents.run_agent(ag, _panel(), budget=24,
+                            evaluator=agents.PanelEvaluator(_panel(), **KW))
+    assert traj.as_dict()["best"] == rep["agents"]["cmaes"]["best"]
+    assert traj.best_label == rep["agents"]["cmaes"]["best_label"]

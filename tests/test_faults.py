@@ -312,3 +312,97 @@ def test_fault_families_one_compile_per_bucket(name):
             for r in scen.run_grid_spec(scenario, grid)]
     assert rows and all(float(r["ratio"]) > 0 for r in rows)
     assert sim.trace_count("run_cells_hetero") - before <= 1, name
+
+
+# --------------------------------------------------------------------------
+# switch-level fault groups (separate structural channel, ISSUE 10)
+# --------------------------------------------------------------------------
+
+def test_switch_group_stamping_and_channel_separation():
+    """make_geometry promotes the most-traversed switch's whole incident
+    link set into the SEPARATE ``link_sw_group`` channel; the primary
+    ``link_group`` channel is untouched (no re-labeling — committed
+    fault scenarios keep their exact link sets) and the padding lane
+    stays untouchable."""
+    geom, _, _ = _cell()
+    sg = np.asarray(geom.link_sw_group)
+    lg = np.asarray(geom.link_group)
+    L = int(geom.L)
+    assert sg.shape == (L + 1,)
+    assert sg[L] == env_lib.GROUP_NONE
+    assert set(np.unique(sg)) <= {env_lib.GROUP_NONE, env_lib.GROUP_SWITCH}
+    # a switch's link set is plural — that is the point of the group
+    assert int(np.sum(sg == env_lib.GROUP_SWITCH)) >= 2
+    assert env_lib.GROUP_SWITCH not in set(lg.tolist())
+    # the switch links are real fabric links (already carrying a group)
+    assert np.all(lg[:L][sg[:L] == env_lib.GROUP_SWITCH]
+                  != env_lib.GROUP_NONE)
+
+
+def test_switch_outage_scale_semantics_and_traced_match():
+    """A GROUP_SWITCH outage row dips exactly the links whose sw-channel
+    matches, leaves every other link at 1.0, and the numpy mirror equals
+    the traced path bit-for-bit."""
+    table = cong.fault_table([cong.switch_outage(1e-3, 2e-3,
+                                                 severity=0.8)])
+    groups = np.asarray([env_lib.GROUP_NONE, env_lib.GROUP_EDGE_UP,
+                         env_lib.GROUP_FABRIC, env_lib.GROUP_HOT],
+                        np.int32)
+    sw = np.asarray([env_lib.GROUP_NONE, env_lib.GROUP_SWITCH,
+                     env_lib.GROUP_SWITCH, env_lib.GROUP_NONE], np.int32)
+    at = jax.jit(env_lib.fault_scale_at)
+    for t in TIMES:
+        v_np = env_lib.fault_scale_np(table, groups, t, link_sw_group=sw)
+        v_tr = np.asarray(at(jnp.asarray(table), jnp.asarray(groups),
+                             jnp.float32(t),
+                             link_sw_group=jnp.asarray(sw)))
+        np.testing.assert_array_equal(v_tr, v_np, err_msg=str(t))
+    mid = env_lib.fault_scale_np(table, groups, 2e-3, link_sw_group=sw)
+    assert mid[1] == pytest.approx(0.2) and mid[2] == pytest.approx(0.2)
+    assert mid[0] == 1.0 and mid[3] == 1.0  # non-switch links untouched
+    np.testing.assert_array_equal(
+        env_lib.fault_scale_np(table, groups, 0.5e-3, link_sw_group=sw),
+        1.0)  # before the window
+
+
+def test_switch_channel_guard_bit_identity():
+    """Tables WITHOUT a GROUP_SWITCH row must produce bit-identical
+    scales whether or not the sw channel is supplied: the channel can
+    only match group-5 event rows, and only switch_outage writes 5s."""
+    table = cong.fault_table([
+        cong.outage(1e-3, 2e-3, 1.0, link_group=env_lib.GROUP_EDGE_UP),
+        cong.flap(0.5e-3, 20e-3, duty=0.4, seed=5),
+        cong.degrade(0.2e-3, 1.5e-3, severity=0.7,
+                     link_group=env_lib.GROUP_FABRIC),
+    ])
+    sw = np.asarray([env_lib.GROUP_NONE, env_lib.GROUP_SWITCH,
+                     env_lib.GROUP_SWITCH, env_lib.GROUP_NONE,
+                     env_lib.GROUP_SWITCH], np.int32)
+    for t in TIMES:
+        np.testing.assert_array_equal(
+            env_lib.fault_scale_np(table, GROUPS, t, link_sw_group=sw),
+            env_lib.fault_scale_np(table, GROUPS, t), err_msg=str(t))
+
+
+def test_switch_outage_bites_engine():
+    """A hard switch outage through the geometry's stamped sw channel
+    must cut goodput (guard against an accidentally-inert channel)."""
+    geom, flows, _ = _cell()
+    assert int(np.sum(np.asarray(geom.link_sw_group)
+                      == env_lib.GROUP_SWITCH)) > 0
+    table = cong.fault_table([cong.switch_outage(0.0, 1.0, 1.0)])
+    _, gp0 = _run_steps(geom, _params(geom, flows, 0), "ref", n=50)
+    _, gp1 = _run_steps(geom, _params(geom, flows, 0, fault=table),
+                        "ref", n=50)
+    assert float(jnp.sum(gp1)) < float(jnp.sum(gp0))
+
+
+def test_link_fault_scenario_carries_switch_variant():
+    """The full link_fault family now includes a whole-switch outage
+    profile (the quick variant stays unchanged for CI cost)."""
+    labels = [p.label() for g in scen.get("link_fault", quick=False).grids
+              for p in g.profiles]
+    assert any("outage[sw" in lab for lab in labels), labels
+    quick = [p.label() for g in scen.get("link_fault", quick=True).grids
+             for p in g.profiles]
+    assert not any("outage[sw" in lab for lab in quick)

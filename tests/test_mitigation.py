@@ -297,3 +297,28 @@ def test_dnf_cells_excluded_from_scores():
     front = score.pareto_frontier(list(scores.values()))
     assert "broken" not in {s.candidate for s in front}
     assert score.pick_winner(list(scores.values())).candidate != "broken"
+
+
+def test_simulated_times_agent_aware_cache():
+    """The lru table is keyed on the Candidate too (ISSUE 10 bugfix):
+    re-evaluating a cached (system, scale, candidate) point is a pure
+    table hit — zero new traces, bit-identical times — and a non-default
+    candidate at the same point is its own entry, never the stale
+    default-config time."""
+    search._times_table.cache_clear()
+    cand = Candidate(policy=POLICY_ECMP, cc=(("md", 0.3),))
+    args = ("nanjing_nslb", 8, "alltoall", "alltoall", float(4 << 20),
+            cong.steady())
+    t_def = search.simulated_times(*args, n_iters=6, warmup=2)
+    t_c1 = search.simulated_times(*args, candidate=cand, n_iters=6,
+                                  warmup=2)
+    before = sim.trace_count("run_cells_hetero")
+    t_def2 = search.simulated_times(*args, n_iters=6, warmup=2)
+    t_c2 = search.simulated_times(*args, candidate=cand, n_iters=6,
+                                  warmup=2)
+    assert sim.trace_count("run_cells_hetero") == before
+    info = search.simulated_times_cache_info()
+    assert info.hits >= 2 and info.currsize >= 2
+    assert t_def2 == t_def and t_c2 == t_c1
+    # the candidate actually keys the table: congested times differ
+    assert t_c1[1] != t_def[1]

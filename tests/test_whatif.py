@@ -1,0 +1,179 @@
+"""Batched what-if serving layer (ISSUE 10, DESIGN.md §17).
+
+Load-bearing contracts pinned here:
+
+* **Coalescing bit-identity** — K queries answered in shared waves
+  produce scorecards BIT-IDENTICAL to running each query alone (lane
+  construction is per-(cell, candidate); padding lanes and foreign
+  queries in the same wave are invisible under vmap).
+* **Mixed buckets** — queries whose geometries land in different
+  power-of-two buckets coalesce in the same wave without perturbing
+  each other.
+* **Budget semantics** — budget exhaustion returns best-so-far with
+  ``finish_reason="budget"``; a drained grid returns ``"drained"``;
+  duplicate candidates cost no evaluations.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import congestion as cong
+from repro.core.fabric import simulator as sim
+from repro.core.mitigation import agents
+from repro.core.mitigation.search import Candidate
+from repro.runtime import whatif
+
+KW = dict(n_iters=5, warmup=2, max_steps=50_000)
+KiB = float(1 << 10)
+
+CANDS = tuple(agents.grid_candidates(("hol_factor", "md"),
+                                     points_per_knob=2))
+
+
+def _queries():
+    qa = whatif.WhatIfQuery(system="cresco8", n_nodes=8,
+                            vector_bytes=256 * KiB, agent="grid",
+                            candidates=CANDS, budget=8, batch=2)
+    # different scale -> different GeometryDims bucket than qa
+    qb = whatif.WhatIfQuery(system="cresco8", n_nodes=16,
+                            vector_bytes=128 * KiB, agent="grid",
+                            candidates=CANDS[:3], budget=8, batch=2)
+    return qa, qb
+
+
+def _table(res):
+    return {s.candidate: (s.ratio_min, s.ratio_mean, s.aggr_gbps,
+                          s.jain, s.t_base_worst_rel)
+            for s in res.scores}
+
+
+@functools.lru_cache(maxsize=None)
+def _serial_results():
+    out = []
+    for q in _queries():
+        srv = whatif.WhatIfServer(max_batch=1, **KW)
+        uid = srv.submit(q)
+        srv.run_until_drained()
+        out.append(srv.result(uid))
+    return tuple(out)
+
+
+def test_coalesced_bit_identical_to_serial_mixed_buckets():
+    """Two mixed-bucket queries sharing waves must score every
+    (cell, candidate) point bit-for-bit like the one-query-per-server
+    runs, and agree on winners and frontiers."""
+    qa, qb = _queries()
+    srv = whatif.WhatIfServer(max_batch=4, **KW)
+    ua, ub = srv.submit(qa), srv.submit(qb)
+    stats = srv.run_until_drained()
+    ra, rb = srv.result(ua), srv.result(ub)
+    r1, r2 = _serial_results()
+    assert _table(ra) == _table(r1)
+    assert _table(rb) == _table(r2)
+    assert ra.winner.candidate == r1.winner.candidate
+    assert rb.winner.candidate == r2.winner.candidate
+    assert [s.candidate for s in ra.frontier] \
+        == [s.candidate for s in r1.frontier]
+    # both queries drained their grids; the waves were truly shared
+    assert ra.finish_reason == rb.finish_reason == "drained"
+    assert stats.queries_done == 2
+    assert stats.coalesced_calls < ra.evals + rb.evals, \
+        "coalescing must batch many candidates per engine dispatch"
+    assert stats.lanes > 0 and stats.evals == ra.evals + rb.evals
+
+
+def test_coalesced_waves_one_call_per_wave():
+    """Each wave is ONE run_candidate_rows invocation even with
+    multiple active queries (the whole point of the serving layer)."""
+    qa, qb = _queries()
+    srv = whatif.WhatIfServer(max_batch=4, **KW)
+    srv.submit(qa), srv.submit(qb)
+    waves = 0
+    while srv.active or srv.queue:
+        calls0 = srv.stats.coalesced_calls
+        srv.step_wave()
+        waves += 1
+        assert srv.stats.coalesced_calls - calls0 <= 1
+        if waves > 20:
+            pytest.fail("server failed to drain")
+    assert srv.stats.waves == waves
+
+
+def test_budget_exhaustion_returns_best_so_far():
+    q = whatif.WhatIfQuery(system="cresco8", n_nodes=8,
+                           vector_bytes=128 * KiB, agent="grid",
+                           candidates=CANDS, budget=2, batch=2)
+    srv = whatif.WhatIfServer(max_batch=2, **KW)
+    uid = srv.submit(q)
+    assert srv.poll(uid) is None
+    with pytest.raises(KeyError):
+        srv.result(uid)
+    srv.run_until_drained()
+    res = srv.result(uid)
+    assert res.finish_reason == "budget"
+    assert res.evals == 2  # stopped at the budget, not the grid size
+    assert len(res.scores) == 3  # default + 2 evaluated candidates
+    assert res.winner is not None and np.isfinite(res.objective)
+    assert res.winner_candidate is None \
+        or res.winner_candidate.label() == res.winner.candidate
+
+
+def test_duplicate_candidates_cost_nothing():
+    dup = (CANDS[0], CANDS[1], CANDS[0], CANDS[1], CANDS[2])
+    q = whatif.WhatIfQuery(system="cresco8", n_nodes=8,
+                           vector_bytes=128 * KiB, agent="grid",
+                           candidates=dup, budget=10, batch=2)
+    srv = whatif.WhatIfServer(**KW)
+    uid = srv.submit(q)
+    srv.run_until_drained()
+    res = srv.result(uid)
+    assert res.finish_reason == "drained"
+    assert res.evals == 3  # the two repeats were served from the memo
+    assert len(res.scores) == 4  # default + 3 distinct candidates
+
+
+def test_agent_tier_budget_and_observe():
+    q = whatif.WhatIfQuery(system="cresco8", n_nodes=8,
+                           vector_bytes=128 * KiB, agent="cmaes",
+                           knobs=("hol_factor", "md"), budget=6, batch=3,
+                           seed=0)
+    srv = whatif.WhatIfServer(**KW)
+    uid = srv.submit(q)
+    srv.run_until_drained()
+    res = srv.result(uid)
+    assert res.finish_reason == "budget" and res.evals >= 6
+    assert len(res.frontier) >= 1
+    # the query's agent actually observed its generations
+    assert res.scores and np.isfinite(res.objective)
+
+
+def test_query_validation():
+    with pytest.raises(KeyError):
+        whatif.WhatIfQuery(system="cresco8", n_nodes=8, agent="annealing")
+    with pytest.raises(ValueError):
+        whatif.WhatIfQuery(system="cresco8", n_nodes=8, budget=0)
+    with pytest.raises(KeyError):
+        whatif.WhatIfQuery(system="not_a_fabric", n_nodes=8)
+
+
+def test_whatif_launcher_helper():
+    """launch.sweep.whatif_launcher wires the lane-sharded dispatch the
+    serving layer uses on a mesh — on the 1-device mesh it must be
+    bit-identical to the plain path."""
+    import jax
+
+    from repro.launch.sweep import whatif_launcher
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("cell",))
+    q = whatif.WhatIfQuery(system="cresco8", n_nodes=8,
+                           vector_bytes=128 * KiB, agent="grid",
+                           candidates=CANDS[:2], budget=4, batch=2)
+    srv = whatif.WhatIfServer(launcher=whatif_launcher(mesh), **KW)
+    uid = srv.submit(q)
+    srv.run_until_drained()
+    res = srv.result(uid)
+    plain = whatif.WhatIfServer(**KW)
+    uid2 = plain.submit(q)
+    plain.run_until_drained()
+    assert _table(res) == _table(plain.result(uid2))

@@ -358,3 +358,85 @@ def test_short_slots_one_shot_and_horizon():
     # inactive slots (0 drawn bytes) delivered exactly nothing
     idle = drawn[:, tp.short_idx] == 0.0
     assert (fb[:, tp.short_idx][idle] == 0.0).all()
+
+
+# --------------------------------------------------------------------------
+# bounded-Pareto short-flow size mix (ISSUE 10 satellite)
+# --------------------------------------------------------------------------
+
+_PAR_MIN, _PAR_MAX = float(32 << 10), float(8 << 20)
+
+
+def _pareto_template(frac, alpha=1.3):
+    t = _template()
+    return dataclasses.replace(t, spec=dataclasses.replace(
+        t.spec, short_pareto_frac=frac, short_pareto_alpha=alpha,
+        short_pareto_min=_PAR_MIN, short_pareto_max=_PAR_MAX))
+
+
+def test_pareto_mix_draw_inertness_and_bounds():
+    """frac=1 swaps every active short size for a bounded-Pareto draw —
+    and nothing else: activation, arrival times, CC kinds and staggers
+    ride the untouched legacy key split, and every drawn size lands
+    exactly inside [xm, xM] (inverse-CDF construction)."""
+    t, tp = _template(), _pareto_template(1.0)
+    p0, p1 = wl.lower_seed(t, 7), wl.lower_seed(tp, 7)
+    for f in ("flow_start", "fct_mask", "kind"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(p0, f)), np.asarray(getattr(p1, f)),
+            err_msg=f"{f} perturbed by the Pareto mix")
+    bpi0 = np.asarray(p0.bytes_per_iter)
+    bpi1 = np.asarray(p1.bytes_per_iter)
+    sidx = np.asarray(t.short_idx)
+    other = np.ones(len(bpi0), bool)
+    other[sidx] = False
+    np.testing.assert_array_equal(bpi0[other], bpi1[other])
+    act = bpi1[sidx] > 0
+    assert act.any()
+    # same slots fire (activation stream untouched), idle slots stay 0
+    np.testing.assert_array_equal(bpi0[sidx] > 0, act)
+    np.testing.assert_array_equal(bpi1[sidx][~act], 0.0)
+    # f32 lowering of exact-bound draws: one ulp of slack
+    assert (bpi1[sidx][act] >= np.float32(_PAR_MIN) * (1 - 1e-6)).all()
+    assert (bpi1[sidx][act] <= np.float32(_PAR_MAX) * (1 + 1e-6)).all()
+
+
+def test_pareto_mix_conserves_unmixed_draws():
+    """Partial mixing is a per-slot where(): the non-heavy slots keep
+    their lognormal draw bit-for-bit (drawn-bytes conservation), the
+    heavy slots are bounded-Pareto draws."""
+    t, tm = _template(), _pareto_template(0.5)
+    sidx = np.asarray(t.short_idx)
+    s0 = np.asarray(wl.lower_seed(t, 11).bytes_per_iter)[sidx]
+    sm = np.asarray(wl.lower_seed(tm, 11).bytes_per_iter)[sidx]
+    active = s0 > 0
+    assert active.any()
+    same = (sm == s0) & active
+    changed = (sm != s0) & active
+    assert same.any() and changed.any(), (int(same.sum()),
+                                          int(changed.sum()))
+    assert (sm[changed] >= np.float32(_PAR_MIN) * (1 - 1e-6)).all()
+    assert (sm[changed] <= np.float32(_PAR_MAX) * (1 + 1e-6)).all()
+
+
+def test_pareto_mix_batch_invariant():
+    tm = _pareto_template(0.35)
+    p_one = wl.lower_seed(tm, 3)
+    p_batch = wl.lower_seeds(tm, np.arange(8))
+    for f in ("bytes_per_iter", "flow_start", "fct_mask", "kind"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(p_one, f)),
+            np.asarray(getattr(p_batch, f))[3],
+            err_msg=f"{f}: seed 3 alone != lane 3 under the Pareto mix")
+
+
+def test_pareto_spec_validation():
+    spec = _template().spec
+    with pytest.raises(ValueError):
+        dataclasses.replace(spec, short_pareto_frac=1.5)
+    with pytest.raises(ValueError):
+        dataclasses.replace(spec, short_pareto_frac=0.5,
+                            short_pareto_min=2.0, short_pareto_max=1.0)
+    with pytest.raises(ValueError):
+        dataclasses.replace(spec, short_pareto_frac=0.5,
+                            short_pareto_alpha=0.0)
